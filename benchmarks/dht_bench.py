@@ -1,0 +1,103 @@
+"""DHT case study -- Fig. 6 of the paper.
+
+P-1 processes hammer one victim volume with F_W inserts / (1-F_W)
+reads under three synchronization schemes: foMPI-A (lock-free
+CAS/FAO), foMPI-RW (centralized RW lock), RMA-RW (ours). Metric:
+total simulated execution time for a fixed op budget.
+
+Also includes a wall-clock micro-benchmark of the TPU batched table
+(the Pallas dht_probe path) vs its pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api, engine
+from repro.core.programs.dht import FompiADHT
+from benchmarks.locks import PROCS_PER_NODE, make_lock
+
+N_TABLE_WORDS = 64
+
+
+MAX_EVENTS = 1_500_000
+
+
+def _normalized_us(m, P, target_acq):
+    """Total-time estimate: us/op x total ops. Exact when the run
+    completed; a steady-state estimator when it hit the event cap
+    (centralized locks at P>=256 converge extremely slowly -- the
+    paper's 'does not scale' behaviour)."""
+    done = int(m.total_acquires)
+    if done == 0:                 # saturated: no op finished in budget
+        return float("inf")
+    return float(m.makespan) / done * (P * target_acq)
+
+
+def _run_fompi_a(P, fw, target_acq, seed=0):
+    lock = api.FompiSpinLock(P=P)            # reuse machine/window plumbing
+    # table words live in the extra scratch area (owned round-robin);
+    # rebuild layout with enough scratch for table + heap pointer.
+    from repro.core.window import build_layout
+    lock.layout = build_layout(lock.machine, 1,
+                               extra_words=N_TABLE_WORDS + 1)
+    W = lock.layout.W
+    table_words = np.arange(W - N_TABLE_WORDS - 1, W - 1, dtype=np.int32)
+    heap_word = W - 1
+    writer_mask = api.writer_mask(P, fw)
+    prog = FompiADHT(table_words, heap_word, writer_mask)
+    env = engine.make_env(lock.machine, lock.layout,
+                          is_writer=writer_mask, target_acq=target_acq)
+    m = engine.run_sim(prog, env, lock.layout, seed=seed,
+                       max_events=MAX_EVENTS)
+    return _normalized_us(m, P, target_acq)
+
+
+def _run_locked(kind, P, fw, target_acq, seed=0):
+    lock = make_lock(kind, P, writer_fraction=fw)
+    m = lock.run(target_acq=target_acq, cs_kind=1, seed=seed,
+                 max_events=MAX_EVENTS)
+    assert int(m.violations) == 0
+    return _normalized_us(m, P, target_acq)
+
+
+def bench_dht(ps=(16, 64), fws=(0.0, 0.02, 0.05, 0.20), target_acq=4):
+    out = []
+    for P in ps:
+        for fw in fws:
+            rec = {"bench": "dht", "P": P, "F_W": fw,
+                   "fompi_a_us": _run_fompi_a(P, fw, target_acq),
+                   "fompi_rw_us": _run_locked("fompi_rw", P, fw,
+                                              target_acq),
+                   "rma_rw_us": _run_locked("rma_rw", P, fw, target_acq)}
+            out.append(rec)
+    return out
+
+
+def bench_batched_table(n_keys=512, nb=16, TB=256, iters=20):
+    """Wall-clock of the Pallas-kernel table vs a python-loop oracle."""
+    from repro.dht import BatchedDHT
+    from repro.kernels import ref
+
+    rng = np.random.RandomState(0)
+    keys = jnp.asarray(rng.permutation(1 << 20)[:n_keys] + 1, jnp.int32)
+    vals = jnp.arange(n_keys, dtype=jnp.int32)
+    dht = BatchedDHT(nb=nb, TB=TB, heap=4 * n_keys, interpret=True)
+    st = dht.init()
+    st, _ = dht.insert(st, keys, vals)       # warm compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        st2, _ = dht.insert(dht.init(), keys, vals)
+        st2.table_keys.block_until_ready()
+    kernel_s = (time.perf_counter() - t0) / iters
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out, _ = dht.lookup(st, keys)
+        out.block_until_ready()
+    lookup_s = (time.perf_counter() - t0) / iters
+    return [{"bench": "dht_table", "n_keys": n_keys,
+             "insert_us_per_batch": kernel_s * 1e6,
+             "lookup_us_per_batch": lookup_s * 1e6}]

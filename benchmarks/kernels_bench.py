@@ -1,0 +1,51 @@
+"""Pallas-kernel micro-benchmarks (interpret mode on CPU: numbers are
+correctness-path wall clock, NOT TPU performance -- the TPU story is
+told by the dry-run roofline; this guards against regressions in the
+kernel wrappers)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jnp.asarray(out[0] if isinstance(out, tuple) else out
+                ).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jnp.asarray(out[0] if isinstance(out, tuple) else out
+                    ).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_kernels():
+    rng = np.random.RandomState(0)
+    out = []
+
+    B, S, H, KV, dh = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.randn(B, S, H, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, KV, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, KV, dh), jnp.float32)
+    out.append({"bench": "kernel_flash", "shape": f"{B}x{S}x{H}x{dh}",
+                "pallas_us": _time(ops.flash_attention, q, k, v,
+                                   interpret=True, block_q=64, block_kv=64),
+                "ref_us": _time(lambda *a: ref.attention_ref(*a), q, k, v)})
+
+    b, S2, H2, P, N = 1, 128, 2, 32, 16
+    x = jnp.asarray(rng.randn(b, S2, H2, P), jnp.float32)
+    dt = jnp.asarray(rng.rand(b, S2, H2) * 0.5, jnp.float32)
+    A = -jnp.asarray(rng.rand(H2) + 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.randn(b, S2, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(b, S2, N), jnp.float32)
+    out.append({"bench": "kernel_ssd", "shape": f"{b}x{S2}x{H2}x{P}x{N}",
+                "pallas_us": _time(ops.ssd_scan, x, dt, A, Bm, Cm,
+                                   chunk=32, interpret=True),
+                "ref_us": _time(lambda *a: ref.ssd_ref(*a), x, dt, A,
+                                Bm, Cm)})
+    return out

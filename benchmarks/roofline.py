@@ -1,0 +1,59 @@
+"""Roofline aggregation: read results/dryrun/*.json into the
+EXPERIMENTS.md tables (one row per arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+
+
+def load_records(tag=""):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("tag", "") == tag and "mode" not in r:
+            recs.append(r)          # hier records have their own table
+    return recs
+
+
+def fmt_float(x):
+    return f"{x:.3e}" if isinstance(x, float) else str(x)
+
+
+def markdown_table(recs, mesh=None):
+    rows = ["| arch | shape | mesh | compute_s | memory_s | collective_s "
+            "| bottleneck | MODEL/HLO flops | roofline frac | state GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip: {r['reason']} |||||||")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR {r.get('error', '')[:60]} |||||||")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("useful_flops_ratio")
+        ratio_s = f"{ratio:.2f}" if ratio else "n/a"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['bottleneck']} "
+            f"| {ratio_s} | {rf['roofline_fraction']:.2f} "
+            f"| {r['state_bytes_per_device'] / (1 << 30):.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load_records()
+    print(markdown_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Benchmark driver: one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
+
+Writes results/bench/*.csv and prints a summary. Simulated latencies /
+throughputs come from the calibrated cost model (DESIGN.md §4); the
+roofline section reads the dry-run artifacts if present.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../results/bench")
+
+
+def write_csv(name, rows):
+    if not rows:
+        return
+    os.makedirs(RESULTS, exist_ok=True)
+    keys = sorted({k for r in rows for k in r})
+    with open(os.path.join(RESULTS, name + ".csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def show(title, rows, cols):
+    print(f"\n== {title} ==")
+    hdr = " ".join(f"{c:>16s}" for c in cols)
+    print(hdr)
+    for r in rows:
+        print(" ".join(
+            f"{r.get(c, ''):>16.4g}" if isinstance(r.get(c), float)
+            else f"{str(r.get(c, '')):>16s}" for c in cols))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small P values only (CI-speed)")
+    ap.add_argument("--full", action="store_true",
+                    help="larger P sweep (P up to 1024; slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: lb,ecsb,sob,wcsb,warb,rw,tdc,tl,tr,"
+                         "dht,table,kernels,roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import dht_bench, kernels_bench, locks, roofline, thresholds
+
+    ps = (16, 64) if args.quick else (16, 64, 256)
+    if args.full:
+        ps = (16, 64, 256, 1024)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(x):
+        return only is None or x in only
+
+    if want("lb"):
+        rows = locks.bench_latency(ps=ps)
+        write_csv("lb", rows)
+        show("LB: acquire+release latency (us, simulated)", rows,
+             ["bench", "kind", "P", "latency_us"])
+    for b in ("ecsb", "sob", "wcsb", "warb"):
+        if want(b):
+            rows = locks.bench_throughput(b, ps=ps)
+            write_csv(b, rows)
+            show(f"{b.upper()}: throughput (acquires/s, simulated)", rows,
+                 ["bench", "kind", "P", "throughput_per_s", "locality"])
+    if want("rw"):
+        rows = locks.bench_rw_vs_sota(ps=ps)
+        write_csv("rw_vs_sota", rows)
+        show("RW vs SOTA (Fig. 5)", rows,
+             ["kind", "F_W", "P", "throughput_per_s"])
+    if want("tdc"):
+        rows = thresholds.sweep_tdc(ps=ps[:2] if args.quick else ps)
+        write_csv("tdc", rows)
+        show("T_DC sweep (Fig. 4a)", rows,
+             ["T_DC", "P", "throughput_per_s", "latency_us"])
+    if want("tl"):
+        rows = thresholds.sweep_tl_product()
+        rows += thresholds.sweep_tl_split()
+        write_csv("tl", rows)
+        show("T_L sweeps (Fig. 4b-d)", rows,
+             ["bench", "T_L", "throughput_per_s", "latency_us",
+              "locality"])
+    if want("tr"):
+        rows = thresholds.sweep_tr()
+        write_csv("tr", rows)
+        show("T_R sweep (Fig. 4e-f)", rows,
+             ["T_R", "F_W", "throughput_per_s"])
+    if want("dht"):
+        rows = dht_bench.bench_dht(ps=(16,) if args.quick else (16, 64))
+        write_csv("dht", rows)
+        show("DHT case study (Fig. 6; total us, lower=better)", rows,
+             ["P", "F_W", "fompi_a_us", "fompi_rw_us", "rma_rw_us"])
+    if want("table"):
+        rows = dht_bench.bench_batched_table()
+        write_csv("dht_table", rows)
+        show("Batched TPU table (interpret-mode wall us)", rows,
+             ["n_keys", "insert_us_per_batch", "lookup_us_per_batch"])
+    if want("kernels"):
+        rows = kernels_bench.bench_kernels()
+        write_csv("kernels", rows)
+        show("Pallas kernels (interpret-mode wall us)", rows,
+             ["bench", "shape", "pallas_us", "ref_us"])
+    if want("roofline"):
+        recs = roofline.load_records()
+        if recs:
+            print("\n== Roofline (from dry-run artifacts) ==")
+            print(roofline.markdown_table(recs, mesh="pod16x16"))
+        else:
+            print("\n(no dry-run artifacts; run python -m "
+                  "repro.launch.dryrun first)")
+    print("\nbenchmarks complete; csv in results/bench/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Threshold sweeps -- Fig. 4 of the paper.
+
+  sweep_tdc  (4a): physical-counter spacing T_DC
+  sweep_tl   (4b-d): locality thresholds T_L,i (product + split)
+  sweep_tr   (4e-f): reader batch T_R, crossed with F_W
+"""
+from __future__ import annotations
+
+from benchmarks.locks import PROCS_PER_NODE, run_benchmark
+
+
+def sweep_tdc(ps=(32, 64, 256), tdcs=(4, 16, 32, 64), fw=0.002):
+    out = []
+    for t in tdcs:
+        for P in ps:
+            if t > P:
+                continue
+            r = run_benchmark("rma_rw", P, bench="ecsb",
+                              writer_fraction=fw, T_DC=t)
+            r["T_DC"] = t
+            out.append(r)
+    return out
+
+
+def sweep_tl_product(P=64, products=(16, 100, 1000), fw=0.25):
+    """Fig 4b: total writer batch T_W = prod(T_L) before reader handover."""
+    from repro.core import api
+    out = []
+    for prod in products:
+        leaf = max(int(prod ** 0.5), 1)
+        root = max(prod // leaf, 1)
+        lock = api.RMARWLock(P=P, fanout=(max(P // PROCS_PER_NODE, 1),),
+                             T_DC=PROCS_PER_NODE, T_L=(root, leaf),
+                             T_R=1024, writer_fraction=fw)
+        m = lock.run(target_acq=4, cs_kind=0, seed=0)
+        assert int(m.violations) == 0 and bool(m.completed)
+        out.append({"bench": "tl_product", "P": P, "T_W": root * leaf,
+                    "T_L": (root, leaf),
+                    "throughput_per_s": float(m.throughput),
+                    "latency_us": float(m.mean_latency),
+                    "locality": float(m.locality)})
+    return out
+
+
+def sweep_tl_split(P=64, splits=((100, 10), (40, 25), (20, 50)), fw=0.25):
+    """Fig 4c/d: fixed product, varying the per-level split (root, leaf)."""
+    from repro.core import api
+    out = []
+    for root, leaf in splits:
+        lock = api.RMARWLock(P=P, fanout=(max(P // PROCS_PER_NODE, 1),),
+                             T_DC=PROCS_PER_NODE, T_L=(root, leaf),
+                             T_R=1024, writer_fraction=fw)
+        m = lock.run(target_acq=4, cs_kind=0, seed=0)
+        assert int(m.violations) == 0 and bool(m.completed)
+        out.append({"bench": "tl_split", "P": P, "T_L": (root, leaf),
+                    "throughput_per_s": float(m.throughput),
+                    "latency_us": float(m.mean_latency),
+                    "locality": float(m.locality)})
+    return out
+
+
+def sweep_tr(P=64, trs=(64, 512, 4096), fws=(0.002, 0.02, 0.05)):
+    out = []
+    for fw in fws:
+        for tr in trs:
+            r = run_benchmark("rma_rw", P, bench="ecsb",
+                              writer_fraction=fw, T_R=tr)
+            r["T_R"] = tr
+            r["F_W"] = fw
+            out.append(r)
+    return out

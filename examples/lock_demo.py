@@ -1,0 +1,37 @@
+"""Lock family tour: every protocol of the paper on one workload, plus
+the locality/fairness dial (T_L) and the reader/writer dial (T_R).
+
+    PYTHONPATH=src python examples/lock_demo.py
+"""
+from repro.core import api
+
+P = 64
+print(f"== all five protocols, P={P}, single-op CS ==")
+for kind in ("fompi_spin", "fompi_rw", "d_mcs", "rma_mcs", "rma_rw"):
+    kw = {}
+    if kind in ("rma_mcs", "rma_rw"):
+        kw = dict(fanout=(4,), T_L=(1 << 20, 8))
+    if kind in ("rma_rw", "fompi_rw"):
+        kw["writer_fraction"] = 0.05
+    if kind == "rma_rw":
+        kw.update(T_DC=16, T_R=1024)
+    lock = api.LOCKS[kind](P=P, **kw)
+    m = lock.run(target_acq=6, cs_kind=1, seed=0)
+    print(f"  {kind:11s} latency={float(m.mean_latency):9.2f}us "
+          f"throughput={float(m.throughput):10.3g}/s "
+          f"locality={float(m.locality):.2f} "
+          f"(violations={int(m.violations)})")
+
+print("\n== T_L: locality vs fairness (RMA-MCS, Fig. 4c) ==")
+for t_leaf in (1, 4, 16, 64):
+    lock = api.RMAMCSLock(P=P, fanout=(4,), T_L=(1 << 20, t_leaf))
+    m = lock.run(target_acq=6, seed=0)
+    print(f"  T_L,leaf={t_leaf:3d}: locality={float(m.locality):.2f} "
+          f"throughput={float(m.throughput):10.3g}/s")
+
+print("\n== T_R: reader batch before writer handover (Fig. 4e) ==")
+for t_r in (16, 256, 4096):
+    lock = api.RMARWLock(P=P, fanout=(4,), T_DC=16, T_L=(4, 4), T_R=t_r,
+                         writer_fraction=0.05)
+    m = lock.run(target_acq=6, seed=0)
+    print(f"  T_R={t_r:5d}: throughput={float(m.throughput):10.3g}/s")

@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~110M-parameter LM for a few hundred
+steps with the full production stack -- deterministic data pipeline,
+AdamW, async checkpointing, crash recovery.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+(~2-4 s/step on a laptop CPU; on TPU the same Trainer jits against the
+production mesh.) Optionally inject a failure to watch recovery:
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60 --fault-at 35
+"""
+import argparse
+
+from repro.configs.base import ArchConfig
+from repro.runtime import Trainer, TrainerConfig
+
+# ~110M params: a qwen2-family config between the smoke and full sizes.
+CONFIG_110M = ArchConfig(
+    name="repro-110m",
+    family="dense",
+    n_layers=10,
+    d_model=640,
+    n_heads=10,
+    n_kv_heads=2,
+    d_ff=2560,
+    vocab=32000,
+    head_dim=64,
+    qkv_bias=True,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope=True,
+    tie_embeddings=True,
+    source="this repo (scaled qwen2 family)",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--workdir", default="/tmp/repro_train_110m")
+    ap.add_argument("--fault-at", type=int, default=None)
+    args = ap.parse_args()
+
+    from repro.models import lm
+    total, _ = lm.param_counts(CONFIG_110M)
+    print(f"model: {CONFIG_110M.name}, {total / 1e6:.1f}M params")
+
+    from repro.optim import AdamWConfig
+    tc = TrainerConfig(batch=args.batch, seq=args.seq, ckpt_every=50,
+                       log_every=10, fault_at_step=args.fault_at,
+                       warmup_steps=20, total_steps=args.steps,
+                       opt=AdamWConfig(lr=1e-3, weight_decay=0.01))
+    trainer = Trainer(CONFIG_110M, args.workdir, tc)
+    state = (trainer.run_with_recovery(args.steps)
+             if args.fault_at is not None else trainer.run(args.steps))
+    print(f"finished at step {int(state.step)}; "
+          f"metrics in {trainer.metrics_path}")
+    # Show the loss trajectory.
+    import json
+    with open(trainer.metrics_path) as f:
+        recs = [json.loads(l) for l in f]
+    first, last = recs[0], recs[-1]
+    print(f"loss: step {first['step']} -> {first['loss']:.4f} ... "
+          f"step {last['step']} -> {last['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quick CPU smoke of every assigned architecture (SMOKE configs):
+one loss+grad step, one prefill, one decode step. Dev tool; the real
+tests live in tests/test_archs.py."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import lm
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.RandomState(seed)
+    batch = {}
+    if cfg.frame_dim:
+        batch["frames"] = jnp.asarray(
+            rng.randn(B, S, cfg.frame_dim).astype(np.float32))
+        batch["labels"] = jnp.asarray(
+            rng.randint(0, cfg.vocab, (B, S)).astype(np.int32))
+        return batch
+    batch["tokens"] = jnp.asarray(
+        rng.randint(0, cfg.vocab, (B, S)).astype(np.int32))
+    if cfg.n_patches:
+        batch["patches"] = jnp.asarray(
+            rng.randn(B, cfg.n_patches, cfg.d_model).astype(np.float32))
+    return batch
+
+
+def main():
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        batch = make_batch(cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, cfg, batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+        assert jnp.isfinite(gnorm), f"{arch}: non-finite grads"
+        line = f"{arch:20s} loss={float(loss):8.4f} gnorm={float(gnorm):9.4f}"
+        if cfg.has_decode:
+            logits, cache = lm.prefill(params, cfg, make_batch(cfg, B=1, S=16))
+            # grow cache to 24 positions for decode
+            cache2 = lm.make_cache(cfg, 1, 24)
+            cache2 = jax.tree.map(
+                lambda z, c: jax.lax.dynamic_update_slice(
+                    z, c.astype(z.dtype), (0,) * z.ndim)
+                if z.ndim else c, cache2, cache)
+            tok = jnp.asarray([[3]], jnp.int32)
+            lg, cache2 = lm.decode_step(params, cfg, tok, cache2)
+            assert jnp.all(jnp.isfinite(lg.astype(jnp.float32))), arch
+            line += f" decode_ok logits={lg.shape}"
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

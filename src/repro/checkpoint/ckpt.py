@@ -1,0 +1,143 @@
+"""Checkpoint save/restore.
+
+Format: one directory per step, `step_<n>/arrays.npz` + `manifest.json`
+(tree structure, dtypes, step, user metadata), written to a tmp dir and
+atomically renamed -- a crash mid-write never corrupts the latest
+checkpoint. Tensors are stored *logically* (unsharded): on load they
+are re-placed with whatever sharding the current mesh dictates, which
+is what makes checkpoints elastic (a job can restart on a different
+(data, model) shape -- see runtime/elastic.py and the tests).
+
+At 1000+-node scale one would write per-shard files (each host dumps
+its addressable shards) with the same manifest scheme; the logical
+format here keeps the laptop-scale tests exact while the manifest
+carries everything needed for that extension.
+
+AsyncCheckpointer moves serialization off the training loop's critical
+path: the step thread only blocks on jax.device_get (fast), the
+compress+write happens on a background thread (straggler avoidance at
+the host layer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    meta: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    treedef = jax.tree_util.tree_structure(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": int(step),
+            "treedef": str(treedef),
+            "keys": sorted(flat.keys()),
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "meta": meta or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                   # atomic commit
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like: Any,
+                    sharding_tree: Any = None) -> Tuple[Any, dict]:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). If sharding_tree is given, leaves are placed
+    with those shardings (elastic restore onto any mesh)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (jax.tree_util.tree_leaves(sharding_tree)
+                    if sharding_tree is not None else None)
+    out = []
+    for i, (pth, leaf) in enumerate(leaves_paths):
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in pth)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint/model shape mismatch at {key}: "
+                f"{arr.shape} vs {leaf.shape}")
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+class AsyncCheckpointer:
+    """Background checkpoint writer (one in flight at a time)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._done = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._done.set()
+                return
+            step, host_tree, meta = item
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, meta)
+            except BaseException as e:        # surfaced on next submit/close
+                self._err = e
+
+    def submit(self, step: int, tree: Any, meta: Optional[dict] = None):
+        if self._err:
+            raise self._err
+        host_tree = jax.device_get(tree)       # the only sync point
+        self._q.put((int(step), host_tree, meta))
+
+    def close(self):
+        self._q.put(None)
+        self._done.wait(timeout=60)
+        if self._err:
+            raise self._err

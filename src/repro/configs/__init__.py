@@ -1,0 +1,6 @@
+from repro.configs.base import (ALIASES, ARCH_IDS, SHAPES, ArchConfig,
+                                ShapeSpec, cell_supported, get_config,
+                                get_smoke_config)
+
+__all__ = ["ALIASES", "ARCH_IDS", "SHAPES", "ArchConfig", "ShapeSpec",
+           "cell_supported", "get_config", "get_smoke_config"]

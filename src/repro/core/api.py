@@ -1,0 +1,148 @@
+"""Public API for the distributed RMA locks.
+
+Typical use:
+
+    from repro.core import api
+    lock = api.RMARWLock(P=64, fanout=(8,), T_DC=8, T_L=(4, 4), T_R=64,
+                         writer_fraction=0.2)
+    m = lock.run(target_acq=16, seed=0)
+    assert m.violations == 0 and m.completed
+
+Lock kinds map to the paper: `rma_rw` (§3), `rma_mcs` (§3.5), `d_mcs`
+(§2.4), `fompi_spin` / `fompi_rw` (§5 baselines).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.cost import CostModel, DEFAULT_COST
+from repro.core.programs import fompi, hier
+from repro.core.topology import Machine, build_machine
+from repro.core.window import Layout, build_layout
+
+
+def writer_mask(P: int, writer_fraction: float, seed: int = 17) -> np.ndarray:
+    """Random reader/writer roles (paper §4.4: 'defined randomly')."""
+    n_writers = max(1, int(round(P * writer_fraction))) if writer_fraction > 0 else 0
+    rng = np.random.RandomState(seed)
+    mask = np.zeros(P, bool)
+    if n_writers:
+        mask[rng.choice(P, size=n_writers, replace=False)] = True
+    return mask
+
+
+@dataclasses.dataclass
+class BaseLock:
+    P: int
+    fanout: Sequence[int] = (1,)
+    T_DC: int = 1
+    T_L: Sequence[int] | None = None
+    T_R: int = 1 << 26
+    writer_fraction: float = 1.0
+    cost: CostModel = DEFAULT_COST
+    role_seed: int = 17
+
+    def __post_init__(self):
+        self.machine: Machine = build_machine(self.P, tuple(self.fanout))
+        self.layout: Layout = build_layout(self.machine, self.T_DC,
+                                           extra_words=4)
+        self.is_writer = self._roles()
+        self.program = self._program()
+
+    # --- overridden by subclasses ---
+    def _roles(self) -> np.ndarray:
+        return np.ones(self.P, bool)
+
+    def _program(self):
+        raise NotImplementedError
+
+    def make_env(self, *, target_acq=8, cs_kind=0, think=False) -> engine.Env:
+        return engine.make_env(
+            self.machine, self.layout, T_L=self.T_L, T_R=self.T_R,
+            is_writer=self.is_writer, target_acq=target_acq,
+            cs_kind=cs_kind, think=think, cost=self.cost)
+
+    def run(self, *, target_acq=8, cs_kind=0, think=False, seed=0,
+            max_events=2_000_000, env: engine.Env | None = None
+            ) -> engine.Metrics:
+        env = env or self.make_env(target_acq=target_acq, cs_kind=cs_kind,
+                                   think=think)
+        return engine.run_sim(self.program, env, self.layout, seed=seed,
+                              max_events=max_events)
+
+
+@dataclasses.dataclass
+class RMARWLock(BaseLock):
+    """The paper's topology-aware distributed Reader-Writer lock (§3)."""
+
+    writer_fraction: float = 0.002
+
+    def _roles(self):
+        return writer_mask(self.P, self.writer_fraction, self.role_seed)
+
+    def _program(self):
+        return hier.rma_rw()
+
+
+@dataclasses.dataclass
+class RMAMCSLock(BaseLock):
+    """Topology-aware distributed MCS lock (§3.5). Writers only."""
+
+    def _program(self):
+        return hier.rma_mcs()
+
+
+@dataclasses.dataclass
+class DMCSLock(BaseLock):
+    """Topology-oblivious distributed MCS lock (§2.4): one root queue."""
+
+    def __post_init__(self):
+        self.fanout = ()          # N = 1: a single machine-wide queue
+        super().__post_init__()
+
+    def _program(self):
+        return hier.d_mcs()
+
+
+@dataclasses.dataclass
+class FompiSpinLock(BaseLock):
+    """foMPI's simple CAS spin lock (§5 comparison target)."""
+
+    def __post_init__(self):
+        self.fanout = ()
+        super().__post_init__()
+
+    def _program(self):
+        # extra scratch words live at the end of the window.
+        return fompi.FompiSpin(lock_word=self.layout.W - 4)
+
+
+@dataclasses.dataclass
+class FompiRWLock(BaseLock):
+    """foMPI-style centralized reader-writer lock (§5 comparison target)."""
+
+    writer_fraction: float = 0.002
+
+    def __post_init__(self):
+        self.fanout = ()
+        super().__post_init__()
+
+    def _roles(self):
+        return writer_mask(self.P, self.writer_fraction, self.role_seed)
+
+    def _program(self):
+        return fompi.FompiRW(rcnt_word=self.layout.W - 4,
+                             wflag_word=self.layout.W - 3)
+
+
+LOCKS = {
+    "rma_rw": RMARWLock,
+    "rma_mcs": RMAMCSLock,
+    "d_mcs": DMCSLock,
+    "fompi_spin": FompiSpinLock,
+    "fompi_rw": FompiRWLock,
+}

@@ -1,0 +1,314 @@
+"""Jitted discrete-event simulator for distributed RMA lock protocols.
+
+Execution model (DESIGN.md §2.1): every protocol is compiled to a list
+of *instructions* — atomic protocol actions consisting of one or a few
+RMA operations (the paper always pairs ops with a Flush, so an
+instruction's latency is the round-trip of its constituent ops). Each
+process owns a program counter and a register file. The simulator is a
+single `lax.while_loop`: per event it picks the process with the
+smallest ready-time and executes its current instruction through
+`lax.switch`. Atomicity of FAO/CAS is inherited from the
+one-event-at-a-time semantics; *contention* is modeled by an occupancy
+charge serializing atomics on a hot word; *spinning* is modeled by
+block-on-word with wake-on-write (plus an exponential-backoff timeout so
+no schedule can livelock the simulation) — semantically identical to the
+paper's spin loops but O(1) events per wait.
+
+Schedule randomization: every instruction duration receives seeded
+uniform jitter. `vmap` over seeds yields thousands of distinct
+interleavings per configuration — our executable analogue of the paper's
+SPIN model checking (§4.4), used by the property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import CostModel, DEFAULT_COST
+from repro.core.topology import Machine, proc_distance_matrix
+from repro.core.window import Layout, padded_level_table
+
+INF = jnp.float32(3.4e38)
+
+
+class SimState(NamedTuple):
+    window: jnp.ndarray      # int32 [W]
+    pc: jnp.ndarray          # int32 [P]
+    regs: jnp.ndarray        # int32 [P, R]
+    t_ready: jnp.ndarray     # float32 [P]
+    blocked_a: jnp.ndarray   # int32 [P]  (watched word or -1)
+    blocked_b: jnp.ndarray   # int32 [P]
+    backoff: jnp.ndarray     # float32 [P]
+    busy: jnp.ndarray        # float32 [W]
+    clock: jnp.ndarray       # float32 []
+    done: jnp.ndarray        # bool [P]
+    events: jnp.ndarray      # int32 []
+    # metrics
+    acq_count: jnp.ndarray   # int32 [P]
+    lat_sum: jnp.ndarray     # float32 [P]
+    t_attempt: jnp.ndarray   # float32 [P]
+    writer_active: jnp.ndarray  # int32 []
+    reader_active: jnp.ndarray  # int32 []
+    violations: jnp.ndarray  # int32 []
+    hold_rank: jnp.ndarray   # int32 [] rank of last CS enterer (locality stats)
+    local_passes: jnp.ndarray   # int32 [] CS handoffs that stayed on-node
+    total_passes: jnp.ndarray   # int32 []
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """Static (traced-constant) simulation environment shared by handlers."""
+
+    P: int
+    N: int
+    plain: jnp.ndarray        # [P, P] plain op latency
+    atomic: jnp.ndarray       # [P, P] atomic op latency
+    owner: jnp.ndarray        # [W]
+    next_t: jnp.ndarray       # [N, maxE] word tables
+    status_t: jnp.ndarray     # [N, maxE]
+    tail_t: jnp.ndarray       # [N, maxJ]
+    arrive_w: jnp.ndarray     # [C]
+    depart_w: jnp.ndarray     # [C]
+    ctr_rank: jnp.ndarray     # [C]
+    ctr_of_p: jnp.ndarray     # [P]
+    C: int
+    ent_of_p: jnp.ndarray     # [N, P]
+    elem_of_p: jnp.ndarray    # [N, P]
+    same_leaf: jnp.ndarray    # [P, P] bool (locality statistics)
+    T_L: jnp.ndarray          # [N] per-level local-pass thresholds (index 0 = root)
+    T_R: int
+    T_W: int
+    is_writer: jnp.ndarray    # [P] bool
+    target_acq: int
+    cs_kind: int              # 0 empty, 1 single-op, 2 random 1-4us workload
+    think: bool               # wait-after-release 1-4us (WARB)
+    cost: CostModel
+
+    def lat_plain(self, p, word):
+        return self.plain[p, self.owner[word]]
+
+    def lat_atomic(self, p, word):
+        return self.atomic[p, self.owner[word]]
+
+
+# Handler signature: (env, p, now, key, st) -> SimState
+Handler = Callable
+
+
+def finish_instr(env: Env, st: SimState, p, now, key, *, dur, hot_word,
+                 writes: Sequence, next_pc, regs_row,
+                 block_a=None, block_b=None, window=None,
+                 reset_backoff: bool = False,
+                 extra: Callable = None) -> SimState:
+    """Common bookkeeping tail of every instruction handler.
+
+    writes: list of word indices written (watchers get woken).
+    hot_word: word whose occupancy serializes this op (-1 = none).
+    block_a/b: words to (re)watch; None = not blocked.
+    """
+    dur = jnp.asarray(dur, jnp.float32)
+    jit_amt = jax.random.uniform(key, (), jnp.float32, 0.0, env.cost.jitter)
+    hot = jnp.asarray(hot_word, jnp.int32)
+    busy_at = jnp.where(hot >= 0, st.busy[jnp.maximum(hot, 0)], jnp.float32(0))
+    start = jnp.maximum(now, busy_at)
+    finish = start + dur + jit_amt
+    busy = st.busy
+    busy = jnp.where(hot >= 0, busy.at[jnp.maximum(hot, 0)].set(
+        start + env.cost.occupancy), busy)
+
+    window = st.window if window is None else window
+    t_ready = st.t_ready
+    blocked_a, blocked_b = st.blocked_a, st.blocked_b
+    # The executing process always sheds its stale watch state first
+    # (it may have been woken by timeout rather than by a write).
+    blocked_a = blocked_a.at[p].set(-1)
+    blocked_b = blocked_b.at[p].set(-1)
+    # Wake watchers of written words — but only if the stored value
+    # actually changed (a spinner only observes changes; a failed CAS or
+    # an idempotent Put must not wake the herd).
+    for w in writes:
+        w = jnp.asarray(w, jnp.int32)
+        changed = st.window[w] != window[w]
+        hit = ((blocked_a == w) | (blocked_b == w)) & (~st.done) & changed
+        t_ready = jnp.where(hit, jnp.minimum(t_ready, finish + env.cost.wake),
+                            t_ready)
+        blocked_a = jnp.where(hit, -1, blocked_a)
+        blocked_b = jnp.where(hit, -1, blocked_b)
+
+    # block_a/block_b are runtime values: -1 (or None) means "not blocked".
+    ba = jnp.asarray(-1 if block_a is None else block_a, jnp.int32)
+    bb = jnp.asarray(-1 if block_b is None else block_b, jnp.int32)
+    blocked_now = (ba >= 0) | (bb >= 0)
+    blocked_a = blocked_a.at[p].set(ba)
+    blocked_b = blocked_b.at[p].set(bb)
+    t_ready = t_ready.at[p].set(
+        finish + jnp.where(blocked_now, st.backoff[p], 0.0))
+    # Exponential backoff semantics of a retry loop: grow while blocked,
+    # persist across the loop's non-blocking instructions, reset only on
+    # success (CS entry) — otherwise centralized locks livelock instead
+    # of degrading, and we could not reproduce the paper's §5 contrasts.
+    kept = env.cost.backoff0 if reset_backoff else st.backoff[p]
+    backoff = st.backoff.at[p].set(
+        jnp.where(blocked_now,
+                  jnp.minimum(st.backoff[p] * 2.0, env.cost.backoff_max),
+                  kept))
+
+    st = st._replace(
+        window=window, pc=st.pc.at[p].set(jnp.asarray(next_pc, jnp.int32)),
+        regs=st.regs.at[p].set(regs_row), t_ready=t_ready,
+        blocked_a=blocked_a, blocked_b=blocked_b, backoff=backoff,
+        busy=busy, clock=now, events=st.events + 1)
+    if extra is not None:
+        st = extra(st, finish)
+    return st
+
+
+def cs_enter(env: Env, st: SimState, p, now) -> SimState:
+    """Mutual-exclusion accounting at CS entry."""
+    w = env.is_writer[p]
+    viol = jnp.where(
+        (st.writer_active > 0) | (w & (st.reader_active > 0)), 1, 0)
+    same = env.same_leaf[st.hold_rank, p] & (st.hold_rank >= 0)
+    return st._replace(
+        violations=st.violations + viol,
+        writer_active=st.writer_active + jnp.where(w, 1, 0),
+        reader_active=st.reader_active + jnp.where(w, 0, 1),
+        lat_sum=st.lat_sum.at[p].add(now - st.t_attempt[p]),
+        hold_rank=jnp.asarray(p, jnp.int32),
+        local_passes=st.local_passes + jnp.where(same, 1, 0),
+        total_passes=st.total_passes + 1)
+
+
+def cs_exit(env: Env, st: SimState, p) -> SimState:
+    w = env.is_writer[p]
+    return st._replace(
+        writer_active=st.writer_active - jnp.where(w, 1, 0),
+        reader_active=st.reader_active - jnp.where(w, 0, 1))
+
+
+def cs_duration(env: Env, key, p):
+    if env.cs_kind == 0:
+        return jnp.float32(0.0)
+    if env.cs_kind == 1:
+        return jnp.float32(env.cost.lat[2])  # one remote memory access
+    return jax.random.uniform(key, (), jnp.float32, 1.0, 4.0)
+
+
+def think_duration(env: Env, key):
+    if not env.think:
+        return jnp.float32(0.0)
+    return jax.random.uniform(key, (), jnp.float32, 1.0, 4.0)
+
+
+class Metrics(NamedTuple):
+    completed: jnp.ndarray       # bool: every process reached its target
+    violations: jnp.ndarray      # int: mutual-exclusion violations (must be 0)
+    makespan: jnp.ndarray        # float: total simulated time (us)
+    total_acquires: jnp.ndarray  # int
+    mean_latency: jnp.ndarray    # float us per acquire
+    throughput: jnp.ndarray      # acquires per second
+    events: jnp.ndarray
+    locality: jnp.ndarray        # fraction of CS handoffs staying on-node
+    per_proc_acq: jnp.ndarray    # [P]
+
+
+def make_env(m: Machine, layout: Layout, *, T_L=None, T_R=1 << 26,
+             is_writer=None, target_acq=8, cs_kind=0, think=False,
+             cost: CostModel = DEFAULT_COST) -> Env:
+    dist = proc_distance_matrix(m)
+    plain, atomic = cost.tables(dist)
+    if T_L is None:
+        T_L = np.full(m.N, 1 << 26, np.int32)
+    T_L = np.asarray(T_L, np.int32)
+    T_W = int(np.minimum(np.prod(T_L.astype(np.int64)), 1 << 26))
+    if is_writer is None:
+        is_writer = np.ones(m.P, bool)
+    same_leaf = dist <= 1
+    return Env(
+        P=m.P, N=m.N,
+        plain=jnp.asarray(plain), atomic=jnp.asarray(atomic),
+        owner=jnp.asarray(layout.owner),
+        next_t=jnp.asarray(padded_level_table(layout, "next_w")),
+        status_t=jnp.asarray(padded_level_table(layout, "status_w")),
+        tail_t=jnp.asarray(padded_level_table(layout, "tail_w")),
+        arrive_w=jnp.asarray(layout.arrive_w),
+        depart_w=jnp.asarray(layout.depart_w),
+        ctr_rank=jnp.asarray(layout.ctr_rank),
+        ctr_of_p=jnp.asarray(layout.ctr_of_p), C=layout.C,
+        ent_of_p=jnp.asarray(layout.ent_of_p),
+        elem_of_p=jnp.asarray(layout.elem_of_p),
+        same_leaf=jnp.asarray(same_leaf),
+        T_L=jnp.asarray(T_L), T_R=int(T_R), T_W=T_W,
+        is_writer=jnp.asarray(is_writer), target_acq=int(target_acq),
+        cs_kind=int(cs_kind), think=bool(think), cost=cost)
+
+
+def init_state(env: Env, layout: Layout, init_pc: np.ndarray,
+               n_regs: int, init_regs: np.ndarray | None = None) -> SimState:
+    P = env.P
+    regs = (np.zeros((P, n_regs), np.int32)
+            if init_regs is None else init_regs.astype(np.int32))
+    return SimState(
+        window=jnp.asarray(layout.init),
+        pc=jnp.asarray(init_pc, jnp.int32),
+        regs=jnp.asarray(regs),
+        t_ready=jnp.zeros(P, jnp.float32),
+        blocked_a=jnp.full(P, -1, jnp.int32),
+        blocked_b=jnp.full(P, -1, jnp.int32),
+        backoff=jnp.full(P, env.cost.backoff0, jnp.float32),
+        busy=jnp.zeros(layout.W, jnp.float32),
+        clock=jnp.float32(0), done=jnp.zeros(P, bool),
+        events=jnp.int32(0),
+        acq_count=jnp.zeros(P, jnp.int32),
+        lat_sum=jnp.zeros(P, jnp.float32),
+        t_attempt=jnp.zeros(P, jnp.float32),
+        writer_active=jnp.int32(0), reader_active=jnp.int32(0),
+        violations=jnp.int32(0), hold_rank=jnp.int32(-1),
+        local_passes=jnp.int32(0), total_passes=jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("handlers", "max_events"))
+def _run(handlers, max_events: int, st: SimState, seed) -> SimState:
+    key0 = jax.random.PRNGKey(seed)
+
+    def cond(carry):
+        st, _ = carry
+        return (~jnp.all(st.done)) & (st.events < max_events)
+
+    def body(carry):
+        st, key = carry
+        key, sub = jax.random.split(key)
+        tr = jnp.where(st.done, INF, st.t_ready)
+        p = jnp.argmin(tr).astype(jnp.int32)
+        now = tr[p]
+        st = jax.lax.switch(st.pc[p], handlers, p, now, sub, st)
+        return st, key
+
+    st, _ = jax.lax.while_loop(cond, body, (st, key0))
+    return st
+
+
+def run_sim(program, env: Env, layout: Layout, *, seed=0,
+            max_events: int = 2_000_000) -> Metrics:
+    """Run a protocol program to completion and summarize metrics."""
+    handlers = program.build(env)
+    st = init_state(env, layout, program.init_pc(env), program.n_regs,
+                    program.init_regs(env))
+    st = _run(handlers, max_events, st, seed)
+    total = jnp.sum(st.acq_count)
+    mk = jnp.maximum(st.clock, 1e-6)
+    return Metrics(
+        completed=jnp.all(st.done),
+        violations=st.violations,
+        makespan=mk,
+        total_acquires=total,
+        mean_latency=jnp.sum(st.lat_sum) / jnp.maximum(total, 1),
+        throughput=total.astype(jnp.float32) / (mk * 1e-6),
+        events=st.events,
+        locality=st.local_passes / jnp.maximum(st.total_passes, 1),
+        per_proc_acq=st.acq_count)

@@ -1,0 +1,230 @@
+"""State-of-the-art comparison targets from foMPI (Gerstenberger et al.,
+SC'13), the paper's §5 baselines.
+
+  * foMPI-Spin — a simple CAS spin lock over one global word (mutual
+    exclusion only). Topology-oblivious, centralized: contention at the
+    lock word is what limits it at scale (paper §5.1).
+  * foMPI-RW   — a centralized reader-writer lock: a shared reader
+    counter plus a writer flag, both on one rank. Readers FAO the
+    counter then verify the flag; writers CAS the flag then wait for the
+    counter to drain.
+
+Both use the same simulator/cost model as the proposed locks, so the
+comparison isolates protocol design (as in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import Env, SimState, cs_duration, cs_enter, cs_exit, finish_instr, think_duration
+
+_NOOP = jnp.int32(-1)
+
+# foMPI-Spin PCs.
+S_TRY, S_CS, S_REL, S_DONE = 0, 1, 2, 3
+# foMPI-RW PCs.
+W_TRY, W_WAITR, W_CS, W_REL, W_DONE = 0, 1, 2, 3, 4
+R_INC, R_CHECK, R_UNDO, R_CS, R_REL, R_DONE = 5, 6, 7, 8, 9, 10
+
+
+class FompiSpin:
+    """CAS spin lock on window word `lock_word`."""
+
+    n_regs = 2
+
+    def __init__(self, lock_word: int):
+        self.lock_word = int(lock_word)
+        self._cache = {}
+
+    def init_pc(self, env: Env):
+        import numpy as np
+        return np.zeros(env.P, np.int32)
+
+    def init_regs(self, env: Env):
+        import numpy as np
+        return np.zeros((env.P, self.n_regs), np.int32)
+
+    def build(self, env: Env):
+        if id(env) not in self._cache:
+            self._cache[id(env)] = self._build(env)
+        return self._cache[id(env)]
+
+    def _build(self, env: Env):
+        LW = self.lock_word
+
+        def s_try(p, now, key, st: SimState):
+            cur = st.window[LW]
+            got = cur == 0
+            win = st.window.at[LW].set(jnp.where(got, 1, cur))
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, LW), hot_word=LW,
+                                writes=[LW],
+                                next_pc=jnp.where(got, S_CS, S_TRY),
+                                regs_row=st.regs[p], window=win,
+                                block_a=jnp.where(got, _NOOP, LW))
+
+        def s_cs(p, now, key, st: SimState):
+            k1, k2 = jax.random.split(key)
+            st = cs_enter(env, st, p, now)
+            return finish_instr(env, st, p, now, k1,
+                                reset_backoff=True,
+                                dur=cs_duration(env, k2, p), hot_word=-1,
+                                writes=[], next_pc=S_REL, regs_row=st.regs[p])
+
+        def s_rel(p, now, key, st: SimState):
+            st = cs_exit(env, st, p)
+            win = st.window.at[LW].set(0)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, LW), hot_word=LW,
+                                writes=[LW], next_pc=S_DONE,
+                                regs_row=st.regs[p], window=win)
+
+        def s_done(p, now, key, st: SimState):
+            cnt = st.acq_count[p] + 1
+            st = st._replace(acq_count=st.acq_count.at[p].set(cnt),
+                             done=st.done.at[p].set(cnt >= env.target_acq))
+
+            def extra(s, finish):
+                return s._replace(t_attempt=s.t_attempt.at[p].set(finish))
+
+            return finish_instr(env, st, p, now, key,
+                                dur=think_duration(env, key), hot_word=-1,
+                                writes=[], next_pc=S_TRY,
+                                regs_row=st.regs[p], extra=extra)
+
+        return (s_try, s_cs, s_rel, s_done)
+
+
+class FompiRW:
+    """Centralized reader-writer lock: RCNT word + WFLAG word."""
+
+    n_regs = 2
+
+    def __init__(self, rcnt_word: int, wflag_word: int):
+        self.rcnt = int(rcnt_word)
+        self.wflag = int(wflag_word)
+        self._cache = {}
+
+    def init_pc(self, env: Env):
+        import numpy as np
+        pc = np.full(env.P, R_INC, np.int32)
+        pc[np.asarray(env.is_writer)] = W_TRY
+        return pc
+
+    def init_regs(self, env: Env):
+        import numpy as np
+        return np.zeros((env.P, self.n_regs), np.int32)
+
+    def build(self, env: Env):
+        if id(env) not in self._cache:
+            self._cache[id(env)] = self._build(env)
+        return self._cache[id(env)]
+
+    def _build(self, env: Env):
+        RC, WF = self.rcnt, self.wflag
+
+        def w_try(p, now, key, st: SimState):
+            cur = st.window[WF]
+            got = cur == 0
+            win = st.window.at[WF].set(jnp.where(got, 1, cur))
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, WF), hot_word=WF,
+                                writes=[WF],
+                                next_pc=jnp.where(got, W_WAITR, W_TRY),
+                                regs_row=st.regs[p], window=win,
+                                block_a=jnp.where(got, _NOOP, WF))
+
+        def w_waitr(p, now, key, st: SimState):
+            r = st.window[RC]
+            drained = r == 0
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, RC), hot_word=-1,
+                                writes=[],
+                                next_pc=jnp.where(drained, W_CS, W_WAITR),
+                                regs_row=st.regs[p],
+                                block_a=jnp.where(drained, _NOOP, RC))
+
+        def w_cs(p, now, key, st: SimState):
+            k1, k2 = jax.random.split(key)
+            st = cs_enter(env, st, p, now)
+            return finish_instr(env, st, p, now, k1,
+                                reset_backoff=True,
+                                dur=cs_duration(env, k2, p), hot_word=-1,
+                                writes=[], next_pc=W_REL, regs_row=st.regs[p])
+
+        def w_rel(p, now, key, st: SimState):
+            st = cs_exit(env, st, p)
+            win = st.window.at[WF].set(0)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, WF), hot_word=WF,
+                                writes=[WF], next_pc=W_DONE,
+                                regs_row=st.regs[p], window=win)
+
+        def w_done(p, now, key, st: SimState):
+            cnt = st.acq_count[p] + 1
+            st = st._replace(acq_count=st.acq_count.at[p].set(cnt),
+                             done=st.done.at[p].set(cnt >= env.target_acq))
+
+            def extra(s, finish):
+                return s._replace(t_attempt=s.t_attempt.at[p].set(finish))
+
+            return finish_instr(env, st, p, now, key,
+                                dur=think_duration(env, key), hot_word=-1,
+                                writes=[], next_pc=W_TRY,
+                                regs_row=st.regs[p], extra=extra)
+
+        def r_inc(p, now, key, st: SimState):
+            win = st.window.at[RC].add(1)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, RC), hot_word=RC,
+                                writes=[RC], next_pc=R_CHECK,
+                                regs_row=st.regs[p], window=win)
+
+        def r_check(p, now, key, st: SimState):
+            f = st.window[WF]
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, WF), hot_word=-1,
+                                writes=[],
+                                next_pc=jnp.where(f == 0, R_CS, R_UNDO),
+                                regs_row=st.regs[p])
+
+        def r_undo(p, now, key, st: SimState):
+            win = st.window.at[RC].add(-1)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, RC), hot_word=RC,
+                                writes=[RC], next_pc=R_INC,
+                                regs_row=st.regs[p], window=win,
+                                block_a=WF)
+
+        def r_cs(p, now, key, st: SimState):
+            k1, k2 = jax.random.split(key)
+            st = cs_enter(env, st, p, now)
+            return finish_instr(env, st, p, now, k1,
+                                reset_backoff=True,
+                                dur=cs_duration(env, k2, p), hot_word=-1,
+                                writes=[], next_pc=R_REL, regs_row=st.regs[p])
+
+        def r_rel(p, now, key, st: SimState):
+            st = cs_exit(env, st, p)
+            win = st.window.at[RC].add(-1)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, RC), hot_word=RC,
+                                writes=[RC], next_pc=R_DONE,
+                                regs_row=st.regs[p], window=win)
+
+        def r_done(p, now, key, st: SimState):
+            cnt = st.acq_count[p] + 1
+            st = st._replace(acq_count=st.acq_count.at[p].set(cnt),
+                             done=st.done.at[p].set(cnt >= env.target_acq))
+
+            def extra(s, finish):
+                return s._replace(t_attempt=s.t_attempt.at[p].set(finish))
+
+            return finish_instr(env, st, p, now, key,
+                                dur=think_duration(env, key), hot_word=-1,
+                                writes=[], next_pc=R_INC,
+                                regs_row=st.regs[p], extra=extra)
+
+        return (w_try, w_waitr, w_cs, w_rel, w_done,
+                r_inc, r_check, r_undo, r_cs, r_rel, r_done)

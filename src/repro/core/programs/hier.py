@@ -1,0 +1,582 @@
+"""The paper's lock protocols as simulator instruction programs.
+
+One unified program implements the whole family (§3 of the paper):
+
+  * RMA-RW   — has_readers=True, N >= 1 levels (DQ + DT + DC).
+  * RMA-MCS  — has_readers=False, N >= 2 (DQ + DT, no DC; §3.5).
+  * D-MCS    — has_readers=False, N == 1 (single root queue; §2.4).
+
+Program counters follow the paper's listings (4, 5, 7, 8, 9, 10 and the
+counter helpers of Listing 6); comments cite them. Levels are 0-based
+here with 0 = root (paper's level 1) and N-1 = leaf (paper's level N).
+
+Queue entities at level i < N-1 are per-element nodes (HMCS-style
+completion of the abbreviated listings — DESIGN.md §2): `ent_of_p[i, p]`
+is the entity that p acts as at level i, and exclusivity of element-node
+use follows from p only acting at level i-1 while holding level i.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.engine import Env, SimState, cs_duration, cs_enter, cs_exit, finish_instr, think_duration
+from repro.core.window import (ACQUIRE_PARENT, ACQUIRE_START, MODE_CHANGE,
+                               NULL, WAIT, WRITE_FLAG)
+
+# Registers.
+L = 0          # current level during acquire/release descent
+PRED = 1
+STATUS = 2
+NEXT_STAT = 3
+CRESET = 4     # counters_reset flag (Listing 8)
+K = 5          # counter-loop index (Listing 6 loops)
+UL = 6         # unwind level during release
+SUCC0 = 7      # SUCC0+lvl: successor observed at level lvl (max 4 levels)
+BARRIER = 11   # reader barrier flag (Listing 9)
+RET = 12       # reader FAO result
+TMP = 13       # return-pc for the shared reset-counters loop
+N_REGS = 16
+
+# Writer PCs.
+WA_PREP, WA_ENQ, WA_LINK, WA_SPIN, WA_START_PARENT = 0, 1, 2, 3, 4
+W_SCTW_FLAG, W_SCTW_VERIFY = 5, 6
+# (7 merged into WA_START_PARENT)
+CS, WR_READ, WR_DECIDE = 8, 9, 10
+ROOT_DECIDE, ROOT_RESET, ROOT_CAS, ROOT_WAITSUCC, ROOT_PASS = 11, 12, 13, 14, 15
+UNW_CHECK, UNW_WAIT, UNW_PUT = 16, 17, 18
+ROOT_GETSUCC = 19
+DONE_ONE = 20
+# Reader PCs (Listing 9/10).
+R_BARRIER, R_FAO, R_CHECK_TAIL, R_BACKOFF, R_CS, R_RELEASE, R_RESET, R_DONE = (
+    21, 22, 23, 24, 25, 26, 27, 28)
+N_PCS = 29
+
+_NOOP = jnp.int32(-1)
+
+
+class HierProgram:
+    """RMA-RW / RMA-MCS / D-MCS instruction program."""
+
+    n_regs = N_REGS
+
+    def __init__(self, has_readers: bool):
+        self.has_readers = has_readers
+        self._cache = {}
+
+    def init_pc(self, env: Env):
+        import numpy as np
+        pc = np.zeros(env.P, np.int32)
+        if self.has_readers:
+            pc[~np.asarray(env.is_writer)] = R_BARRIER
+        return pc
+
+    def init_regs(self, env: Env):
+        import numpy as np
+        regs = np.zeros((env.P, N_REGS), np.int32)
+        regs[:, L] = env.N - 1
+        return regs
+
+    # -- helpers -------------------------------------------------------
+    def build(self, env: Env):
+        key = id(env)
+        if key not in self._cache:
+            self._cache[key] = self._build(env)
+        return self._cache[key]
+
+    def _build(self, env: Env):
+        RW = self.has_readers
+        Nlv = env.N
+
+        def ent(r, lvl, p):
+            return env.ent_of_p[lvl, p]
+
+        def nw(lvl, e):       # NEXT word of entity e at level lvl
+            return env.next_t[lvl, e]
+
+        def sw(lvl, e):       # STATUS word
+            return env.status_t[lvl, e]
+
+        def tw(lvl, p):       # TAIL word of p's element at level lvl
+            return env.tail_t[lvl, env.elem_of_p[lvl, p]]
+
+        # ---- writer instructions ------------------------------------
+        def wa_prep(p, now, key, st: SimState):
+            """Listing 4/7 lines 2-3: reset own NEXT, STATUS at level L."""
+            r = st.regs[p]
+            lvl = r[L]
+            e = ent(r, lvl, p)
+            win = st.window.at[nw(lvl, e)].set(NULL).at[sw(lvl, e)].set(WAIT)
+            dur = 2.0 * env.lat_plain(p, sw(lvl, e))
+            return finish_instr(env, st, p, now, key, dur=dur, hot_word=-1,
+                                writes=[], next_pc=WA_ENQ, regs_row=r,
+                                window=win)
+
+        def wa_enq(p, now, key, st: SimState):
+            """Listing 4/7: FAO(p, tail, REPLACE) — enqueue; branch on pred."""
+            r = st.regs[p]
+            lvl = r[L]
+            e = ent(r, lvl, p)
+            t = tw(lvl, p)
+            pred = st.window[t]
+            win = st.window.at[t].set(e)
+            r = r.at[PRED].set(pred).at[K].set(0)
+            no_pred = pred == NULL
+            if RW:
+                pc_no_pred = jnp.where(lvl == 0, W_SCTW_FLAG, WA_START_PARENT)
+            else:
+                pc_no_pred = jnp.where(lvl == 0, WA_START_PARENT, WA_START_PARENT)
+            nxt = jnp.where(no_pred, pc_no_pred, WA_LINK)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, t), hot_word=t,
+                                writes=[t], next_pc=nxt, regs_row=r, window=win)
+
+        def wa_link(p, now, key, st: SimState):
+            """Listing 4 line 8: Put(p, pred, NEXT)."""
+            r = st.regs[p]
+            lvl = r[L]
+            w = nw(lvl, r[PRED])
+            win = st.window.at[w].set(ent(r, lvl, p))
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, w), hot_word=-1,
+                                writes=[w], next_pc=WA_SPIN, regs_row=r,
+                                window=win)
+
+        def wa_spin(p, now, key, st: SimState):
+            """Listing 4 lines 10-12 / Listing 7 lines 10-17: local spin."""
+            r = st.regs[p]
+            lvl = r[L]
+            w = sw(lvl, ent(r, lvl, p))
+            s = st.window[w]
+            r = r.at[STATUS].set(s)
+            waiting = s == WAIT
+            if RW:
+                nxt = jnp.where(
+                    waiting, WA_SPIN,
+                    jnp.where(s == ACQUIRE_PARENT, WA_START_PARENT,
+                              jnp.where((lvl == 0) & (s == MODE_CHANGE),
+                                        W_SCTW_FLAG, CS)))
+            else:
+                nxt = jnp.where(waiting, WA_SPIN,
+                                jnp.where(s == ACQUIRE_PARENT,
+                                          WA_START_PARENT, CS))
+            block = jnp.where(waiting, w, _NOOP)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, w), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r,
+                                block_a=block)
+
+        def wa_start_parent(p, now, key, st: SimState):
+            """Listing 4 line 22 (+ Listing 7 lines 17/22): STATUS :=
+            ACQUIRE_START, then climb (or enter CS when at the root)."""
+            r = st.regs[p]
+            lvl = r[L]
+            w = sw(lvl, ent(r, lvl, p))
+            win = st.window.at[w].set(ACQUIRE_START)
+            at_root = lvl == 0
+            r = r.at[L].set(jnp.where(at_root, lvl, lvl - 1))
+            nxt = jnp.where(at_root, CS, WA_PREP)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, w), hot_word=-1,
+                                writes=[w], next_pc=nxt, regs_row=r,
+                                window=win)
+
+        def w_sctw_flag(p, now, key, st: SimState):
+            """Listing 6 set_counters_to_WRITE phase 1: flag counter K."""
+            r = st.regs[p]
+            k = r[K]
+            w = env.arrive_w[k]
+            win = st.window.at[w].add(WRITE_FLAG)
+            last = k + 1 >= env.C
+            r = r.at[K].set(jnp.where(last, 0, k + 1))
+            nxt = jnp.where(last, W_SCTW_VERIFY, W_SCTW_FLAG)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, w), hot_word=w,
+                                writes=[w], next_pc=nxt, regs_row=r,
+                                window=win)
+
+        def w_sctw_verify(p, now, key, st: SimState):
+            """§4.1: after flagging all counters, wait until no reader is
+            active on counter K (arrived - WRITE_FLAG == departed)."""
+            r = st.regs[p]
+            k = r[K]
+            wa, wd = env.arrive_w[k], env.depart_w[k]
+            arr, dep = st.window[wa], st.window[wd]
+            clear = (arr - WRITE_FLAG) == dep
+            last = k + 1 >= env.C
+            r = r.at[K].set(jnp.where(clear & ~last, k + 1,
+                                      jnp.where(clear & last, 0, k)))
+            nxt = jnp.where(~clear, W_SCTW_VERIFY,
+                            jnp.where(last, WA_START_PARENT, W_SCTW_VERIFY))
+            return finish_instr(env, st, p, now, key,
+                                dur=2.0 * env.lat_plain(p, wa), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r,
+                                block_a=jnp.where(clear, _NOOP, wa),
+                                block_b=jnp.where(clear, _NOOP, wd))
+
+        def cs_instr(p, now, key, st: SimState):
+            """Critical section (workload depends on the benchmark)."""
+            k1, k2 = jax.random.split(key)
+            r = st.regs[p]
+            st = cs_enter(env, st, p, now)
+            r = r.at[L].set(Nlv - 1).at[UL].set(Nlv)  # reset for release
+            nxt = ROOT_DECIDE if Nlv == 1 else WR_READ
+            return finish_instr(env, st, p, now, k1,
+                                reset_backoff=True,
+                                dur=cs_duration(env, k2, p), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r)
+
+        def wr_read(p, now, key, st: SimState):
+            """Listing 5 lines 3-4: read succ + status at level L."""
+            r = st.regs[p]
+            lvl = r[L]
+            if Nlv > 1:
+                st = jax.lax.cond(lvl == Nlv - 1,
+                                  lambda s: cs_exit(env, s, p), lambda s: s, st)
+            e = ent(r, lvl, p)
+            succ = st.window[nw(lvl, e)]
+            stat = st.window[sw(lvl, e)]
+            r = r.at[SUCC0 + lvl].set(succ).at[STATUS].set(stat)
+            return finish_instr(env, st, p, now, key,
+                                dur=2.0 * env.lat_plain(p, sw(lvl, e)),
+                                hot_word=-1, writes=[], next_pc=WR_DECIDE,
+                                regs_row=r)
+
+        def wr_decide(p, now, key, st: SimState):
+            """Listing 5 lines 5-12: pass locally within the element, or
+            release toward the root."""
+            r = st.regs[p]
+            lvl = r[L]
+            succ = r[SUCC0 + lvl]
+            can_pass = (succ != NULL) & (r[STATUS] < env.T_L[lvl]) & (lvl > 0)
+            # Local pass: Put(status+1, succ, STATUS) (Listing 5 line 8).
+            w = sw(lvl, succ * jnp.where(succ == NULL, 0, 1))
+            win = jnp.where(can_pass,
+                            st.window.at[w].set(r[STATUS] + 1), st.window)
+            # Else descend: L -= 1; root handled by ROOT_DECIDE.
+            r2 = r.at[L].set(jnp.where(can_pass, lvl, lvl - 1))
+            r2 = r2.at[UL].set(jnp.where(can_pass, lvl + 1, r[UL]))
+            nxt = jnp.where(can_pass, UNW_CHECK,
+                            jnp.where(lvl - 1 >= 1, WR_READ, ROOT_DECIDE))
+            dur = jnp.where(can_pass, env.lat_plain(p, w), 0.02)
+            return finish_instr(env, st, p, now, key, dur=dur, hot_word=-1,
+                                writes=[w], next_pc=nxt, regs_row=r2,
+                                window=win)
+
+        def root_decide(p, now, key, st: SimState):
+            """Listing 8 lines 3-8 (RW) / root release (MCS): read own
+            root STATUS; maybe hand the lock to the readers."""
+            r = st.regs[p]
+            if Nlv == 1:
+                st = cs_exit(env, st, p)
+            e = ent(r, 0, p)
+            stat = st.window[sw(0, e)]
+            ns = stat + 1
+            r = r.at[STATUS].set(stat).at[NEXT_STAT].set(ns).at[CRESET].set(0)
+            if RW:
+                hand_readers = ns >= env.T_W
+                r = r.at[K].set(0).at[TMP].set(ROOT_GETSUCC)
+                nxt = jnp.where(hand_readers, ROOT_RESET, ROOT_GETSUCC)
+            else:
+                nxt = jnp.asarray(ROOT_GETSUCC, jnp.int32)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, sw(0, e)), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r)
+
+        def root_reset(p, now, key, st: SimState):
+            """Listing 6 reset_counters: reset counter K, looping over all
+            counters; then NEXT_STAT := MODE_CHANGE (Listing 8 line 7)."""
+            r = st.regs[p]
+            k = r[K]
+            wa, wd = env.arrive_w[k], env.depart_w[k]
+            arr, dep = st.window[wa], st.window[wd]
+            sub_arr = -dep - jnp.where(arr >= WRITE_FLAG, WRITE_FLAG, 0)
+            win = st.window.at[wa].add(sub_arr).at[wd].add(-dep)
+            last = k + 1 >= env.C
+            r = r.at[K].set(jnp.where(last, 0, k + 1))
+            r = jnp.where(last,
+                          r.at[NEXT_STAT].set(MODE_CHANGE).at[CRESET].set(1),
+                          r)
+            nxt = jnp.where(last, r[TMP], ROOT_RESET)
+            return finish_instr(env, st, p, now, key,
+                                dur=2.0 * env.lat_plain(p, wa)
+                                + 2.0 * env.lat_atomic(p, wa),
+                                hot_word=wa, writes=[wa, wd], next_pc=nxt,
+                                regs_row=r, window=win)
+
+        def root_getsucc(p, now, key, st: SimState):
+            """Listing 8 line 9: succ = Get(p, NEXT)."""
+            r = st.regs[p]
+            e = ent(r, 0, p)
+            succ = st.window[nw(0, e)]
+            r = r.at[SUCC0 + 0].set(succ)
+            if RW:
+                # No successor: hand to readers first if not done yet
+                # (Listing 8 lines 10-13).
+                need_reset = (succ == NULL) & (r[CRESET] == 0)
+                r = r.at[K].set(0).at[TMP].set(ROOT_CAS)
+                nxt = jnp.where(succ != NULL, ROOT_PASS,
+                                jnp.where(need_reset, ROOT_RESET, ROOT_CAS))
+            else:
+                nxt = jnp.where(succ != NULL, ROOT_PASS, ROOT_CAS)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, nw(0, e)), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r)
+
+        def root_cas(p, now, key, st: SimState):
+            """Listing 8 line 15 / Listing 3 line 5: CAS(∅, p, TAIL)."""
+            r = st.regs[p]
+            e = ent(r, 0, p)
+            t = tw(0, p)
+            cur = st.window[t]
+            ok = cur == e
+            win = st.window.at[t].set(jnp.where(ok, NULL, cur))
+            r = r.at[UL].set(1)
+            nxt = jnp.where(ok, UNW_CHECK, ROOT_WAITSUCC)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, t), hot_word=t,
+                                writes=[t], next_pc=nxt, regs_row=r,
+                                window=win)
+
+        def root_waitsucc(p, now, key, st: SimState):
+            """Listing 8 lines 18-20: wait for the successor to appear."""
+            r = st.regs[p]
+            e = ent(r, 0, p)
+            w = nw(0, e)
+            succ = st.window[w]
+            r = r.at[SUCC0 + 0].set(succ)
+            nxt = jnp.where(succ == NULL, ROOT_WAITSUCC, ROOT_PASS)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, w), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r,
+                                block_a=jnp.where(succ == NULL, w, _NOOP))
+
+        def root_pass(p, now, key, st: SimState):
+            """Listing 8 line 23: Put(next_stat, succ, STATUS)."""
+            r = st.regs[p]
+            succ = r[SUCC0 + 0]
+            w = sw(0, succ)
+            win = st.window.at[w].set(r[NEXT_STAT])
+            r = r.at[UL].set(1)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, w), hot_word=-1,
+                                writes=[w], next_pc=UNW_CHECK, regs_row=r,
+                                window=win)
+
+        def unw_check(p, now, key, st: SimState):
+            """Listing 5 lines 13-17 at each level from the release floor
+            back to the leaf: clear the tail or find the late successor."""
+            r = st.regs[p]
+            ul = r[UL]
+            fin = ul > Nlv - 1
+            ulc = jnp.minimum(ul, Nlv - 1)
+            e = ent(r, ulc, p)
+            succ = r[SUCC0 + ulc]
+            t = tw(ulc, p)
+            cur = st.window[t]
+            do_cas = (~fin) & (succ == NULL)
+            cas_ok = do_cas & (cur == e)
+            win = st.window.at[t].set(jnp.where(cas_ok, NULL, cur))
+            r = r.at[UL].set(jnp.where(fin | cas_ok, ul + jnp.where(fin, 0, 1), ul))
+            nxt = jnp.where(fin, DONE_ONE,
+                            jnp.where(succ != NULL, UNW_PUT,
+                                      jnp.where(cas_ok, UNW_CHECK, UNW_WAIT)))
+            dur = jnp.where(do_cas, env.lat_atomic(p, t), 0.02)
+            return finish_instr(env, st, p, now, key, dur=dur,
+                                hot_word=jnp.where(do_cas, t, _NOOP),
+                                writes=[t], next_pc=nxt, regs_row=r,
+                                window=win)
+
+        def unw_wait(p, now, key, st: SimState):
+            """Listing 5 lines 18-20: wait for the late successor."""
+            r = st.regs[p]
+            ul = jnp.minimum(r[UL], Nlv - 1)
+            e = ent(r, ul, p)
+            w = nw(ul, e)
+            succ = st.window[w]
+            r = r.at[SUCC0 + ul].set(succ)
+            nxt = jnp.where(succ == NULL, UNW_WAIT, UNW_PUT)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, w), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r,
+                                block_a=jnp.where(succ == NULL, w, _NOOP))
+
+        def unw_put(p, now, key, st: SimState):
+            """Listing 5 line 23: Put(ACQUIRE_PARENT, succ, STATUS)."""
+            r = st.regs[p]
+            ul = jnp.minimum(r[UL], Nlv - 1)
+            succ = r[SUCC0 + ul]
+            w = sw(ul, succ)
+            win = st.window.at[w].set(ACQUIRE_PARENT)
+            r = r.at[UL].set(ul + 1)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, w), hot_word=-1,
+                                writes=[w], next_pc=UNW_CHECK, regs_row=r,
+                                window=win)
+
+        def done_one(p, now, key, st: SimState):
+            r = st.regs[p]
+            cnt = st.acq_count[p] + 1
+            finished = cnt >= env.target_acq
+            r = r.at[L].set(Nlv - 1).at[CRESET].set(0).at[K].set(0)
+            st = st._replace(acq_count=st.acq_count.at[p].set(cnt),
+                             done=st.done.at[p].set(finished))
+            nxt = WA_PREP
+
+            def extra(s, finish):
+                return s._replace(t_attempt=s.t_attempt.at[p].set(finish))
+
+            return finish_instr(env, st, p, now, key,
+                                dur=think_duration(env, key), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r,
+                                extra=extra)
+
+        # ---- reader instructions (Listings 9 / 10) -------------------
+        def r_barrier(p, now, key, st: SimState):
+            r = st.regs[p]
+            wa = env.arrive_w[env.ctr_of_p[p]]
+            s = st.window[wa]
+            barred = (r[BARRIER] == 1) & (s >= env.T_R)
+            nxt = jnp.where(barred, R_BARRIER, R_FAO)
+            dur = jnp.where(r[BARRIER] == 1, env.lat_plain(p, wa),
+                            jnp.float32(0.02))
+            return finish_instr(env, st, p, now, key, dur=dur, hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r,
+                                block_a=jnp.where(barred, wa, _NOOP))
+
+        def r_fao(p, now, key, st: SimState):
+            """Listing 9 line 12: FAO(1, c(p), ARRIVE, SUM)."""
+            r = st.regs[p]
+            wa = env.arrive_w[env.ctr_of_p[p]]
+            ret = st.window[wa]
+            win = st.window.at[wa].add(1)
+            r = r.at[RET].set(ret)
+            got = ret < env.T_R
+            first = ret == env.T_R
+            r = r.at[BARRIER].set(jnp.where(got, r[BARRIER], 1))
+            nxt = jnp.where(got, R_CS, jnp.where(first, R_CHECK_TAIL,
+                                                 R_BACKOFF))
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, wa), hot_word=wa,
+                                writes=[wa], next_pc=nxt, regs_row=r,
+                                window=win)
+
+        def r_check_tail(p, now, key, st: SimState):
+            """Listing 9 lines 15-21: first to reach T_R checks for
+            waiting writers at the root tail."""
+            r = st.regs[p]
+            t = tw(0, p)
+            cur = st.window[t]
+            nxt = jnp.where(cur == NULL, R_RESET, R_BACKOFF)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_plain(p, t), hot_word=-1,
+                                writes=[], next_pc=nxt, regs_row=r)
+
+        def r_backoff(p, now, key, st: SimState):
+            """Listing 9 line 24: Accumulate(-1, c(p), ARRIVE)."""
+            r = st.regs[p]
+            wa = env.arrive_w[env.ctr_of_p[p]]
+            win = st.window.at[wa].add(-1)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, wa), hot_word=wa,
+                                writes=[wa], next_pc=R_BARRIER, regs_row=r,
+                                window=win)
+
+        def r_cs(p, now, key, st: SimState):
+            k1, k2 = jax.random.split(key)
+            r = st.regs[p]
+            st = cs_enter(env, st, p, now)
+            return finish_instr(env, st, p, now, k1,
+                                reset_backoff=True,
+                                dur=cs_duration(env, k2, p), hot_word=-1,
+                                writes=[], next_pc=R_RELEASE, regs_row=r)
+
+        def r_release(p, now, key, st: SimState):
+            """Listing 10: Accumulate(1, c(p), DEPART)."""
+            r = st.regs[p]
+            wd = env.depart_w[env.ctr_of_p[p]]
+            win = st.window.at[wd].add(1)
+            st = cs_exit(env, st, p)
+            return finish_instr(env, st, p, now, key,
+                                dur=env.lat_atomic(p, wd), hot_word=wd,
+                                writes=[wd], next_pc=R_DONE, regs_row=r,
+                                window=win)
+
+        def r_reset(p, now, key, st: SimState):
+            """Listing 9 line 20: reset own counter; clear barrier."""
+            r = st.regs[p]
+            c = env.ctr_of_p[p]
+            wa, wd = env.arrive_w[c], env.depart_w[c]
+            arr, dep = st.window[wa], st.window[wd]
+            sub_arr = -dep - jnp.where(arr >= WRITE_FLAG, WRITE_FLAG, 0)
+            win = st.window.at[wa].add(sub_arr).at[wd].add(-dep)
+            r = r.at[BARRIER].set(0)
+            return finish_instr(env, st, p, now, key,
+                                dur=2.0 * env.lat_plain(p, wa)
+                                + 2.0 * env.lat_atomic(p, wa),
+                                hot_word=wa, writes=[wa, wd],
+                                next_pc=R_BACKOFF, regs_row=r, window=win)
+
+        def r_done(p, now, key, st: SimState):
+            r = st.regs[p]
+            cnt = st.acq_count[p] + 1
+            finished = cnt >= env.target_acq
+            r = r.at[BARRIER].set(0)
+            st = st._replace(acq_count=st.acq_count.at[p].set(cnt),
+                             done=st.done.at[p].set(finished))
+
+            def extra(s, finish):
+                return s._replace(t_attempt=s.t_attempt.at[p].set(finish))
+
+            return finish_instr(env, st, p, now, key,
+                                dur=think_duration(env, key), hot_word=-1,
+                                writes=[], next_pc=R_BARRIER, regs_row=r,
+                                extra=extra)
+
+        def trap(p, now, key, st: SimState):
+            return finish_instr(env, st, p, now, key, dur=1.0, hot_word=-1,
+                                writes=[], next_pc=N_PCS - 1,
+                                regs_row=st.regs[p])
+
+        handlers = [trap] * N_PCS
+        handlers[WA_PREP] = wa_prep
+        handlers[WA_ENQ] = wa_enq
+        handlers[WA_LINK] = wa_link
+        handlers[WA_SPIN] = wa_spin
+        handlers[WA_START_PARENT] = wa_start_parent
+        handlers[W_SCTW_FLAG] = w_sctw_flag
+        handlers[W_SCTW_VERIFY] = w_sctw_verify
+        handlers[CS] = cs_instr
+        handlers[WR_READ] = wr_read
+        handlers[WR_DECIDE] = wr_decide
+        handlers[ROOT_DECIDE] = root_decide
+        handlers[ROOT_RESET] = root_reset
+        handlers[ROOT_CAS] = root_cas
+        handlers[ROOT_WAITSUCC] = root_waitsucc
+        handlers[ROOT_PASS] = root_pass
+        handlers[UNW_CHECK] = unw_check
+        handlers[UNW_WAIT] = unw_wait
+        handlers[UNW_PUT] = unw_put
+        handlers[DONE_ONE] = done_one
+        handlers[ROOT_GETSUCC] = root_getsucc
+        handlers[R_BARRIER] = r_barrier
+        handlers[R_FAO] = r_fao
+        handlers[R_CHECK_TAIL] = r_check_tail
+        handlers[R_BACKOFF] = r_backoff
+        handlers[R_CS] = r_cs
+        handlers[R_RELEASE] = r_release
+        handlers[R_RESET] = r_reset
+        handlers[R_DONE] = r_done
+        return tuple(handlers)
+
+
+def rma_rw() -> HierProgram:
+    return HierProgram(has_readers=True)
+
+
+def rma_mcs() -> HierProgram:
+    return HierProgram(has_readers=False)
+
+
+d_mcs = rma_mcs  # D-MCS is RMA-MCS on a 1-level machine (single queue).

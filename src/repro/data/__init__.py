@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, batch_for, input_specs
+
+__all__ = ["SyntheticLM", "batch_for", "input_specs"]

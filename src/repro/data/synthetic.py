@@ -1,0 +1,138 @@
+"""Deterministic synthetic data pipeline.
+
+Batches are a pure function of (arch, step, shard), so every restart /
+elastic reshard reproduces the same stream with no external state --
+the property the fault-tolerance tests rely on. A background prefetch
+thread hides host-side generation latency (straggler mitigation at the
+input layer).
+
+`input_specs()` returns ShapeDtypeStruct stand-ins for every model
+input; the dry-run lowers against these without allocating anything.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def _tok_block(seed: int, lo: int, hi: int, shape) -> np.ndarray:
+    """Deterministic token block from a counter-based RNG (Philox)."""
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    return rng.integers(lo, hi, size=shape, dtype=np.int64).astype(np.int32)
+
+
+NOISE = 0.3      # fraction of transitions that resample a fresh token
+
+
+def _lm_block(seed: int, vocab: int, B: int, S: int) -> np.ndarray:
+    """Learnable token stream: sticky repeats (next == prev with
+    probability 1-NOISE, fresh random token otherwise). Uniform-random
+    tokens carry no signal (loss pins at log(vocab)); the copy
+    structure gives optimizers a real gradient with a known entropy
+    floor of ~ (1-NOISE)ln(1/(1-NOISE)) + NOISE*ln(vocab/NOISE), while
+    staying a pure function of (seed, step)."""
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    resets = rng.integers(0, vocab, size=(B, S)).astype(np.int32)
+    noise = rng.random((B, S)) < NOISE
+    noise[:, 0] = True
+    # Segment-fill: each position takes the most recent reset token.
+    idx = np.where(noise, np.arange(S)[None, :], 0)
+    idx = np.maximum.accumulate(idx, axis=1)
+    return np.take_along_axis(resets, idx, axis=1)
+
+
+def _float_block(seed: int, shape) -> np.ndarray:
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    return rng.standard_normal(size=shape, dtype=np.float32)
+
+
+def batch_for(cfg: ArchConfig, B: int, S: int, step: int,
+              *, seed: int = 0) -> Dict[str, np.ndarray]:
+    """One global batch for `step` (pure function; no pipeline state)."""
+    base = (seed * 1_000_003 + step) & 0x7FFFFFFF
+    if cfg.frame_dim:                           # audio: frames + labels
+        return {
+            "frames": _float_block(base, (B, S, cfg.frame_dim)),
+            "labels": _tok_block(base + 1, 0, cfg.vocab, (B, S)),
+        }
+    batch = {"tokens": _lm_block(base, cfg.vocab, B, S)}
+    if cfg.n_patches:                           # vlm: stub patch embeddings
+        batch["patches"] = _float_block(base + 2,
+                                        (B, cfg.n_patches, cfg.d_model))
+    return batch
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                compute_dtype=jnp.float32) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+
+    train/prefill: full [B, S] inputs. decode: one new token + KV cache
+    handled by the serve layer (see launch/dryrun.py).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frame_dim:
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.frame_dim),
+                                           compute_dtype),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.n_patches:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), compute_dtype)
+    return specs
+
+
+class SyntheticLM:
+    """Prefetching iterator over the deterministic stream.
+
+    start_step lets a restarted job resume mid-stream; `device_put_fn`
+    (optional) moves each batch onto the mesh while the next one is
+    being generated on the host thread.
+    """
+
+    def __init__(self, cfg: ArchConfig, B: int, S: int, *, seed: int = 0,
+                 start_step: int = 0, prefetch: int = 2,
+                 device_put_fn=None):
+        self.cfg, self.B, self.S, self.seed = cfg, B, S, seed
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._put = device_put_fn or (lambda x: x)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _producer(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = batch_for(self.cfg, self.B, self.S, step, seed=self.seed)
+            try:
+                self._q.put((step, self._put(batch)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self.step = step + 1
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        # Drain so the producer's blocked put wakes up and exits.
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

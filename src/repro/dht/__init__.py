@@ -1,0 +1,3 @@
+from repro.dht.table import BatchedDHT
+
+__all__ = ["BatchedDHT"]

@@ -1,0 +1,137 @@
+"""Batched hashtable insert/lookup as a Pallas TPU kernel -- the TPU
+adaptation of the paper's §5.3 DHT hot loop.
+
+The paper's insert is "CAS your slot; losers go to the overflow heap".
+A TPU has no remote CAS, so the contention-resolution is re-thought for
+the VPU/MXU (DESIGN.md §2.2): keys are routed (host/jnp side) to table
+*blocks*; inside one VMEM block every conflict is resolved densely:
+
+  * one-hot slot matrix      O[i, s] = (slot_i == s)          [KB, TB]
+  * incumbent gather         inc_i   = sum_s O[i, s] * tk[s]  (matmul)
+  * first-arrival winners    win_i   = no earlier lane with slot_i
+  * claims become the table  tk'     = claimed ? O^T (win * key) : tk
+
+i.e. the atomic CAS becomes a *winner-resolution one-hot contraction*
+-- no scatter, no serialization, pure dense ops. Lane order plays the
+role of the paper's arrival order; losers get status=overflow exactly
+like the paper's overflow-heap path (handled by ops.py in jnp).
+
+Status codes match ref.dht_insert_ref: 0 insert, 1 update, 2 overflow,
+3 padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EMPTY = -1
+
+
+def _insert_kernel(tk_ref, tv_ref, keys_ref, vals_ref,
+                   tk_out, tv_out, status_out, *, KB, TB):
+    tk = tk_ref[0, :]                                  # [TB]
+    tv = tv_ref[0, :]
+    keys = keys_ref[0, :]                              # [KB]
+    vals = vals_ref[0, :]
+    valid = keys != EMPTY
+
+    slot = jnp.where(valid, keys % TB, 0)              # [KB]
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (KB, TB), 1)
+    onehot = (slot[:, None] == iota_s) & valid[:, None]   # [KB, TB]
+
+    # Incumbent key at each lane's slot (one-hot "gather").
+    inc_k = jnp.sum(jnp.where(onehot, tk[None, :], 0), axis=1)
+    occupied_i = jnp.sum(jnp.where(onehot, (tk != EMPTY)[None, :], False),
+                         axis=1) > 0
+
+    # First arrival per slot: no earlier lane contends for my slot.
+    li = jax.lax.broadcasted_iota(jnp.int32, (KB, KB), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (KB, KB), 1)
+    same = (slot[:, None] == slot[None, :]) & valid[:, None] & valid[None, :]
+    earlier = jnp.sum(jnp.where(same & (lj < li), 1, 0), axis=1) > 0
+
+    update = valid & occupied_i & (inc_k == keys)
+    insert = valid & ~occupied_i & ~earlier
+    status = jnp.where(~valid, 3,
+                       jnp.where(insert, 0,
+                                 jnp.where(update, 1, 2)))
+
+    # Claims: winners' one-hot columns fold into the table (no scatter).
+    win_oh = onehot & insert[:, None]                  # [KB, TB]
+    claimed = jnp.sum(win_oh, axis=0) > 0              # [TB]
+    claim_k = jnp.sum(jnp.where(win_oh, keys[:, None], 0), axis=0)
+    claim_v = jnp.sum(jnp.where(win_oh, vals[:, None], 0), axis=0)
+    upd_oh = onehot & update[:, None]
+    updated = jnp.sum(upd_oh, axis=0) > 0
+    upd_v = jnp.sum(jnp.where(upd_oh, vals[:, None], 0), axis=0)
+
+    tk_out[0, :] = jnp.where(claimed, claim_k, tk)
+    tv_out[0, :] = jnp.where(claimed, claim_v,
+                             jnp.where(updated, upd_v, tv))
+    status_out[0, :] = status
+
+
+def _lookup_kernel(tk_ref, tv_ref, keys_ref, val_out, hit_out, *, KB, TB):
+    tk = tk_ref[0, :]
+    tv = tv_ref[0, :]
+    keys = keys_ref[0, :]
+    valid = keys != EMPTY
+    slot = jnp.where(valid, keys % TB, 0)
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (KB, TB), 1)
+    onehot = (slot[:, None] == iota_s) & valid[:, None]
+    inc_k = jnp.sum(jnp.where(onehot, tk[None, :], 0), axis=1)
+    inc_v = jnp.sum(jnp.where(onehot, tv[None, :], 0), axis=1)
+    hit = valid & (inc_k == keys)
+    val_out[0, :] = jnp.where(hit, inc_v, EMPTY)
+    hit_out[0, :] = hit
+
+
+def dht_insert(table_keys, table_vals, keys, vals, *, interpret=False):
+    """Blocked insert. table_*: [nb, TB]; keys/vals: [nb, KB] routed
+    (EMPTY-padded). Returns (table_keys', table_vals', status [nb, KB]).
+    """
+    nb, TB = table_keys.shape
+    KB = keys.shape[1]
+    kernel = functools.partial(_insert_kernel, KB=KB, TB=TB)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, TB), lambda b: (b, 0)),
+                  pl.BlockSpec((1, TB), lambda b: (b, 0)),
+                  pl.BlockSpec((1, KB), lambda b: (b, 0)),
+                  pl.BlockSpec((1, KB), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((1, TB), lambda b: (b, 0)),
+                   pl.BlockSpec((1, TB), lambda b: (b, 0)),
+                   pl.BlockSpec((1, KB), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, TB), jnp.int32),
+                   jax.ShapeDtypeStruct((nb, TB), jnp.int32),
+                   jax.ShapeDtypeStruct((nb, KB), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(table_keys, table_vals, keys, vals)
+
+
+def dht_lookup(table_keys, table_vals, keys, *, interpret=False):
+    """Blocked lookup. Returns (vals [nb, KB], hit [nb, KB])."""
+    nb, TB = table_keys.shape
+    KB = keys.shape[1]
+    kernel = functools.partial(_lookup_kernel, KB=KB, TB=TB)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, TB), lambda b: (b, 0)),
+                  pl.BlockSpec((1, TB), lambda b: (b, 0)),
+                  pl.BlockSpec((1, KB), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((1, KB), lambda b: (b, 0)),
+                   pl.BlockSpec((1, KB), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, KB), jnp.int32),
+                   jax.ShapeDtypeStruct((nb, KB), jnp.bool_)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(table_keys, table_vals, keys)

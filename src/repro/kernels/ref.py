@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+EMPTY = jnp.int32(-1)
+
+
+# ------------------------------------------------------ flash attention
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """Naive attention. q: [B,Sq,H,dh]; k,v: [B,Skv,KV,dh]."""
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / np.sqrt(dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, vf)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------- ssd scan
+def ssd_ref(x, dt, A, B, C, *, init_state=None):
+    """Sequential SSD recurrence (exact oracle).
+
+    x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B,C: [b,S,N].
+    Returns y: [b,S,H,P], final state [b,H,P,N].
+    """
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(s, t):
+        decay = jnp.exp(dtf[:, t] * A[None])                 # [b,H]
+        s = (s * decay[..., None, None]
+             + jnp.einsum("bhp,bn,bh->bhpn", xf[:, t], Bf[:, t], dtf[:, t]))
+        y = jnp.einsum("bhpn,bn->bhp", s, Cf[:, t])
+        return s, y
+
+    s0 = (jnp.zeros((b, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    s_final, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), s_final
+
+
+# ------------------------------------------------------------ dht probe
+def dht_insert_ref(table_keys, table_vals, keys, vals):
+    """Sequential CAS-semantics oracle for the paper's §5.3 insert.
+
+    Each key CASes its slot (keys are already routed: slot = index into
+    this block computed by the host-side hash). Winners (first arrival,
+    empty slot) write; a key equal to the incumbent updates the value;
+    everyone else reports overflow. Returns (keys', vals', status) with
+    status per key: 0 = inserted, 1 = updated, 2 = overflow.
+    """
+    TB = table_keys.shape[0]
+
+    def step(carry, i):
+        tk, tv = carry
+        k, v = keys[i], vals[i]
+        slot = k % TB
+        cur = tk[slot]
+        insert = cur == EMPTY
+        update = cur == k
+        status = jnp.where(insert, 0, jnp.where(update, 1, 2))
+        tk = tk.at[slot].set(jnp.where(insert, k, cur))
+        tv = tv.at[slot].set(jnp.where(insert | update, v, tv[slot]))
+        return (tk, tv), status
+
+    (tk, tv), status = jax.lax.scan(
+        step, (table_keys, table_vals), jnp.arange(keys.shape[0]))
+    return tk, tv, status
+
+
+def dht_lookup_ref(table_keys, table_vals, keys):
+    """Oracle lookup: value at the key's slot if the key matches,
+    else EMPTY (the caller then searches the overflow heap)."""
+    TB = table_keys.shape[0]
+    slots = keys % TB
+    hit = table_keys[slots] == keys
+    return jnp.where(hit, table_vals[slots], EMPTY), hit

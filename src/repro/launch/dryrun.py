@@ -1,0 +1,452 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first two lines (jax locks the device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import functools
+import json
+import re
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config
+from repro.data.synthetic import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.parallel import sharding as shd
+from repro.parallel.constrain import (logical_axis_rules, rules_multi_pod,
+                                      rules_single_pod)
+from repro.serve.steps import build_decode_step, cache_shapes
+from repro.train import step as train_step_mod
+from repro.train.step import build_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../results/dryrun")
+
+# --- TPU v5e hardware model (per chip) ------------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+                "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|"
+    r"collective-permute)\(")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+
+# Bytes-on-the-wire factor per element byte of the op result
+# (ring algorithms: all-reduce moves ~2x the buffer; the rest ~1x).
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device collective bytes from the post-SPMD HLO."""
+    by_op: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        b = _type_bytes(type_str)
+        by_op[op] = by_op.get(op, 0.0) + b
+        counts[op] = counts.get(op, 0) + 1
+    wire = sum(_WIRE_FACTOR[op] * b for op, b in by_op.items())
+    return {"bytes_by_op": by_op, "counts": counts, "wire_bytes": wire}
+
+
+def _bf16_params(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, jnp.bfloat16 if jnp.issubdtype(l.dtype, jnp.floating)
+            else l.dtype), tree)
+
+
+def _sharded_bytes(tree, spec_tree, mesh) -> int:
+    """Exact per-device bytes of a pytree under its PartitionSpecs."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(tree),
+                          jax.tree.leaves(spec_tree,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        div = 1
+        for axes in spec:
+            div *= shd.axis_size(mesh, axes)
+        total += n * leaf.dtype.itemsize // max(div, 1)
+    return total
+
+
+def needs_fsdp(cfg) -> bool:
+    total, _ = lm.param_counts(cfg)
+    return total > 20e9
+
+
+# ---------------------------------------------------------------- lowering
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               remat: str = "dots", extra_tag: str = "",
+               decode_seq2d: bool = False, fsdp_axes=None,
+               grad_sync_dtype: str = "f32"):
+    """Lower + compile one cell; returns the result record.
+
+    Hillclimb levers: decode_seq2d shards the decode KV cache's S dim
+    over 'model' (2D B x S layout); fsdp_axes overrides the ZeRO dim
+    (e.g. ("data",) to keep param gathers off the pod links)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    lm.SCAN_UNROLL = max(int(os.environ.get("REPRO_SCAN_UNROLL", "1")), 1)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "tag": extra_tag,
+    }
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules_multi_pod() if multi_pod else rules_single_pod()
+    dp = shd.dp_axes(mesh)
+    fsdp = needs_fsdp(cfg) and shape.kind == "train"
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        state_sds = jax.eval_shape(
+            functools.partial(train_step_mod.init_state, cfg),
+            jax.random.PRNGKey(0))
+        pspecs = shd.param_spec_tree(state_sds.params, mesh, fsdp=fsdp,
+                                     fsdp_axes=fsdp_axes)
+        state_specs = train_step_mod.TrainState(
+            params=pspecs,
+            opt=type(state_sds.opt)(step=P(), m=pspecs, v=pspecs),
+            step=P())
+        batch_sds = input_specs(cfg, shape, compute_dtype=jnp.bfloat16)
+        bspecs = shd.batch_specs(batch_sds, mesh)
+        to_sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        step_fn = build_train_step(cfg, remat=remat,
+                                   grad_sync_dtype=grad_sync_dtype)
+        jitted = jax.jit(step_fn, in_shardings=(to_sh(state_specs),
+                                                to_sh(bspecs)),
+                         out_shardings=(to_sh(state_specs), None))
+        with mesh, logical_axis_rules(rules):
+            lowered = jitted.lower(state_sds, batch_sds)
+        state_bytes = _sharded_bytes(state_sds, state_specs, mesh)
+        rec["tokens_per_step"] = shape.global_batch * shape.seq_len
+
+    elif shape.kind == "prefill":
+        params_sds = _bf16_params(jax.eval_shape(
+            functools.partial(lm.init_params, cfg), jax.random.PRNGKey(0)))
+        pspecs = shd.param_spec_tree(params_sds, mesh)
+        batch_sds = input_specs(cfg, shape, compute_dtype=jnp.bfloat16)
+        bspecs = shd.batch_specs(batch_sds, mesh)
+        to_sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+
+        def prefill_step(params, batch):
+            return lm.prefill(params, cfg, batch)
+
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(to_sh(pspecs), to_sh(bspecs)))
+        with mesh, logical_axis_rules(rules):
+            lowered = jitted.lower(params_sds, batch_sds)
+        state_bytes = _sharded_bytes(params_sds, pspecs, mesh)
+        rec["tokens_per_step"] = shape.global_batch * shape.seq_len
+
+    else:                                       # decode
+        params_sds = _bf16_params(jax.eval_shape(
+            functools.partial(lm.init_params, cfg), jax.random.PRNGKey(0)))
+        pspecs = shd.param_spec_tree(params_sds, mesh)
+        B, S = shape.global_batch, shape.seq_len
+        cache_sds = cache_shapes(cfg, B, S)
+        seq_par = shape.name == "long_500k"
+        # --decode-seq2d upgrades both decode layouts: decode_32k gets
+        # the 2D (B x S) cache; long_500k spreads S over BOTH axes.
+        sp_axes = (("data", "model") if (decode_seq2d and seq_par)
+                   else None)
+        cspecs = shd.cache_specs(
+            cache_sds, mesh, seq_parallel=seq_par,
+            seq_axis_2d="model" if (decode_seq2d and not seq_par) else None,
+            seq_parallel_axes=sp_axes)
+        tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_spec = P(dp if B % shd.axis_size(mesh, dp) == 0 else None, None)
+        to_sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        decode_fn = build_decode_step(cfg)
+        jitted = jax.jit(decode_fn,
+                         in_shardings=(to_sh(pspecs), to_sh(tok_spec),
+                                       to_sh(cspecs)),
+                         out_shardings=(None, to_sh(cspecs)))
+        with mesh, logical_axis_rules(rules):
+            lowered = jitted.lower(params_sds, tok_sds, cache_sds)
+        state_bytes = (_sharded_bytes(params_sds, pspecs, mesh)
+                       + _sharded_bytes(cache_sds, cspecs, mesh))
+        rec["tokens_per_step"] = B
+
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    # --- analyses ---------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)} if mem is not None else None
+    except Exception as e:                      # CPU backend gaps
+        rec["memory_analysis"] = f"unavailable: {e}"
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        flops = float(ca.get("flops", 0.0))
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:
+        flops, bytes_acc = 0.0, 0.0
+        rec["cost_analysis_error"] = str(e)
+
+    coll = collective_stats(compiled.as_text())
+
+    rec.update(
+        status="ok", fsdp=fsdp, chips=chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        hlo_flops=flops, hlo_bytes=bytes_acc,
+        collectives=coll,
+        state_bytes_per_device=int(state_bytes),
+        remat=remat,
+    )
+
+    # --- roofline terms (seconds, per device) -----------------------------
+    total, active = lm.param_counts(cfg)
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    model_flops = mult * active * rec["tokens_per_step"] / chips
+    rec["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll["wire_bytes"] / LINK_BW,
+        "model_flops_per_device": model_flops,
+        "useful_flops_ratio": (model_flops / flops) if flops else None,
+    }
+    terms = {k: rec["roofline"][k] for k in
+             ("compute_s", "memory_s", "collective_s")}
+    rec["roofline"]["bottleneck"] = max(terms, key=terms.get)
+    rec["roofline"]["bound_s"] = max(terms.values())
+    rec["roofline"]["roofline_fraction"] = (
+        rec["roofline"]["compute_s"] / rec["roofline"]["bound_s"]
+        if rec["roofline"]["bound_s"] else None)
+    return rec
+
+
+def lower_hier(arch: str, T_pod: int, *, compress: bool = False,
+               remat: str = "dots", extra_tag: str = ""):
+    """HC3: lower the pod-local hierarchical train step (paper's T_L
+    transplant) on the multi-pod mesh; measure sync and no-sync HLO
+    separately and amortize: wire(T) = wire_nosync + delta_sync/T.
+
+    All collectives inside the vmapped local step run over (data,
+    model) = intra-pod ICI; the only cross-pod traffic is the periodic
+    sync, so delta_sync IS the cross-pod wire."""
+    import functools
+
+    from repro.configs import get_config
+    from repro.parallel.hierarchical import (build_hier_train_step,
+                                             init_hier_state)
+
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    mesh = make_production_mesh(multi_pod=True)
+    n_pods = int(mesh.shape["pod"])
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules_single_pod()         # inside a pod: data/model only
+
+    state_sds = jax.eval_shape(
+        functools.partial(init_hier_state, cfg, n_pods=n_pods,
+                          compress=compress), jax.random.PRNGKey(0))
+    base_pspecs = shd.param_spec_tree(
+        jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                     state_sds.params), mesh, fsdp_axes=("data",))
+    pod_pspecs = jax.tree.map(lambda s: P("pod", *s), base_pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    err_specs = (pod_pspecs if compress else
+                 jax.tree.map(lambda s: P(), base_pspecs,
+                              is_leaf=lambda x: isinstance(x, P)))
+    anchor_specs = (pod_pspecs if compress else
+                    jax.tree.map(lambda s: P(), base_pspecs,
+                                 is_leaf=lambda x: isinstance(x, P)))
+    state_specs = type(state_sds)(
+        params=pod_pspecs,
+        opt=type(state_sds.opt)(step=P("pod"), m=pod_pspecs, v=pod_pspecs),
+        anchor=anchor_specs, err=err_specs, step=P())
+    batch_sds = {
+        k: jax.ShapeDtypeStruct((n_pods, v.shape[0] // n_pods)
+                                + v.shape[1:], v.dtype)
+        for k, v in input_specs(cfg, shape, jnp.bfloat16).items()}
+    bspecs = jax.tree.map(
+        lambda l: P("pod", "data", *([None] * (len(l.shape) - 2))),
+        batch_sds)
+    to_sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+
+    out = {"arch": arch, "shape": "train_4k", "mesh": "pod2x16x16",
+           "mode": f"hier_T{T_pod}" + ("_int8" if compress else ""),
+           "tag": extra_tag, "status": "ok", "chips": chips}
+    wires, flops, byts = {}, {}, {}
+    for sync_mode in ("never", "always"):
+        step_fn = build_hier_train_step(cfg, n_pods, T_pod,
+                                        compress=compress, remat=remat,
+                                        sync_mode=sync_mode)
+        jitted = jax.jit(step_fn, in_shardings=(to_sh(state_specs),
+                                                to_sh(bspecs)),
+                         out_shardings=(to_sh(state_specs), None))
+        with mesh, logical_axis_rules(rules):
+            compiled = jitted.lower(state_sds, batch_sds).compile()
+        coll = collective_stats(compiled.as_text())
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        wires[sync_mode] = coll["wire_bytes"]
+        flops[sync_mode] = float(ca.get("flops", 0.0))
+        byts[sync_mode] = float(ca.get("bytes accessed", 0.0))
+        out[f"collectives_{sync_mode}"] = coll
+
+    cross_pod = max(wires["always"] - wires["never"], 0.0)
+    amortized = wires["never"] + cross_pod / T_pod
+    out.update(
+        wire_nosync=wires["never"], wire_sync=wires["always"],
+        cross_pod_bytes_per_sync=cross_pod,
+        amortized_wire_bytes=amortized,
+        hlo_flops=flops["never"], hlo_bytes=byts["never"],
+        roofline={
+            "compute_s": flops["never"] / PEAK_FLOPS,
+            "memory_s": byts["never"] / HBM_BW,
+            "collective_s": amortized / LINK_BW,
+            "cross_pod_s_per_sync": cross_pod / LINK_BW,
+        })
+    return out
+
+
+def save_rec(rec, out_dir=RESULTS_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return name
+
+
+def fmt_line(rec):
+    if rec["status"] == "skip":
+        return (f"{rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:11s} "
+                f"SKIP ({rec['reason']})")
+    r = rec["roofline"]
+    return (f"{rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:11s} "
+            f"ok c={r['compute_s']:.3e}s m={r['memory_s']:.3e}s "
+            f"coll={r['collective_s']:.3e}s -> {r['bottleneck']:<12s} "
+            f"frac={r['roofline_fraction']:.2f} "
+            f"(compile {rec['compile_s']:.0f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="one shape name (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--remat", default="dots",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--tag", default="", help="result-file suffix")
+    ap.add_argument("--decode-seq2d", action="store_true",
+                    help="decode cache: shard S over 'model' (hillclimb)")
+    ap.add_argument("--fsdp-axes", default=None,
+                    help="comma axes for ZeRO dim, e.g. 'data'")
+    ap.add_argument("--grad-sync-dtype", default="f32",
+                    choices=["f32", "bf16"])
+    ap.add_argument("--hier", type=int, default=0, metavar="T_POD",
+                    help="lower the hierarchical pod-sync step instead")
+    ap.add_argument("--compress", action="store_true",
+                    help="with --hier: int8 delta exchange")
+    args = ap.parse_args()
+
+    if args.hier:
+        rec = lower_hier(args.arch or "qwen2_0p5b", args.hier,
+                         compress=args.compress, remat=args.remat,
+                         extra_tag=args.tag)
+        name = (f"{rec['arch']}__hier_T{args.hier}"
+                f"{'_int8' if args.compress else ''}"
+                f"{'__' + args.tag if args.tag else ''}.json")
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, name), "w") as f:
+            json.dump(rec, f, indent=1)
+        r = rec["roofline"]
+        print(f"{rec['arch']:18s} hier T={args.hier} "
+              f"int8={args.compress} "
+              f"amortized_wire={rec['amortized_wire_bytes'] / 1e9:.3f}GB "
+              f"cross_pod/sync={rec['cross_pod_bytes_per_sync'] / 1e9:.3f}GB "
+              f"coll={r['collective_s']:.3e}s")
+        return
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = lower_cell(
+                        arch, shape, mp, remat=args.remat,
+                        extra_tag=args.tag,
+                        decode_seq2d=args.decode_seq2d,
+                        fsdp_axes=(tuple(args.fsdp_axes.split(","))
+                                   if args.fsdp_axes else None),
+                        grad_sync_dtype=args.grad_sync_dtype)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "pod2x16x16" if mp else "pod16x16",
+                           "status": "error", "tag": args.tag,
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(rec)
+                save_rec(rec)
+                print(fmt_line(rec) if rec["status"] != "error" else
+                      f"{arch:18s} {shape:12s} ERROR {rec['error'][:120]}",
+                      flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+the slow (DCN / inter-pod) dimension -- parallel.hierarchical spends
+its T_pod budget exactly there.
+
+A FUNCTION, not a module constant: importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only
+launch/dryrun.py forces 512 host devices via XLA_FLAGS before any jax
+import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices the host actually has
+    (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

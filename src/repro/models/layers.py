@@ -1,0 +1,274 @@
+"""Core neural layers shared by all assigned architectures.
+
+Conventions: activations are [batch, seq, d_model]; parameters are plain
+nested dicts of jnp arrays (f32 master copies, cast to bf16 inside the
+forward); attention uses a blocked online-softmax (flash-style) so that
+long-context shapes lower without materializing S^2 score tensors — the
+same algorithm the Pallas kernel implements on TPU (kernels/flash_attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def cast_to(dtype, *xs):
+    return tuple(x.astype(dtype) if x is not None else None for x in xs)
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_layer_norm(x, eps=1e-5):
+    """OLMo's non-parametric LayerNorm (no scale, no bias)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, kind):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["w"])
+    if kind == "nonparam_ln":
+        return nonparam_layer_norm(x)
+    return layer_norm(x, p["w"], p["b"])
+
+
+def init_norm(key, d, kind):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    if kind == "nonparam_ln":
+        return {}
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+# ------------------------------------------------------------------ rope
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))          # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def _block_attn_body(q, k, v, mask_fn, q_offset, kv_block):
+    """Online-softmax over KV blocks for one query block.
+
+    q: [B, Bq, H, Dh]; k, v: [B, S, KV, Dh]; returns [B, Bq, H, Dh].
+    mask_fn(q_pos [Bq], k_pos [Bk]) -> bool [Bq, Bk] (True = attend).
+    """
+    B, S, KV, Dh = k.shape
+    H = q.shape[2]
+    G = H // KV
+    Bq = q.shape[1]
+    scale = 1.0 / np.sqrt(Dh)
+    qs = q.reshape(B, Bq, KV, G, Dh).astype(jnp.float32) * scale
+    nkv = S // kv_block
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * kv_block, kv_block, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * kv_block, kv_block, 1)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qs, ks.astype(jnp.float32))
+        kpos = i * kv_block + jnp.arange(kv_block)
+        qpos = q_offset + jnp.arange(Bq)
+        msk = mask_fn(qpos, kpos)                       # [Bq, Bk]
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vs.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Bq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Bq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Bq, H, Dh)
+
+
+def multihead_attention(q, k, v, *, causal=True, window=None,
+                        q_block=512, kv_block=512):
+    """Blocked attention. q: [B,Sq,H,Dh]; k,v: [B,Skv,KV,Dh]."""
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    q_block = min(q_block, Sq)
+    while Sq % q_block:
+        q_block //= 2
+    kv_block = min(kv_block, Skv)
+    while Skv % kv_block:
+        kv_block //= 2
+
+    def mask_fn(qpos, kpos):
+        m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+        if causal:
+            m &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            m &= kpos[None, :] > qpos[:, None] - window
+        return m
+
+    nq = Sq // q_block
+
+    def qstep(i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * q_block, q_block, 1)
+        return _block_attn_body(qb, k, v, mask_fn, i * q_block, kv_block)
+
+    if nq == 1:
+        return qstep(0).astype(q.dtype)
+    outs = jax.lax.map(qstep, jnp.arange(nq))           # [nq, B, q_block, H, Dh]
+    return (outs.transpose(1, 0, 2, 3, 4)
+            .reshape(B, Sq, H, Dh).astype(q.dtype))
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=None):
+    """Single-token attention against a cache.
+
+    q: [B,1,H,Dh]; k_cache/v_cache: [B,S,KV,Dh]; length: tokens valid.
+    """
+    B, S, KV, Dh = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(Dh)
+    qs = q.reshape(B, 1, KV, G, Dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qs, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)
+    valid = pos < length
+    if window is not None:
+        valid &= pos > (length - 1 - window)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v_cache.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- mlp
+def mlp_apply(p, x, kind):
+    dt = x.dtype
+    if kind == "swiglu":
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        return (jax.nn.silu(g) * u) @ p["w_down"].astype(dt)
+    h = x @ p["w_up"].astype(dt)
+    if "b_up" in p:
+        h = h + p["b_up"].astype(dt)
+    h = jax.nn.gelu(h)
+    out = h @ p["w_down"].astype(dt)
+    if "b_down" in p:
+        out = out + p["b_down"].astype(dt)
+    return out
+
+
+def init_mlp(key, d_model, d_ff, kind, bias=False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    if kind == "swiglu":
+        return {
+            "w_gate": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+            "w_up": jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in,
+            "w_down": jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out,
+        }
+    p = {
+        "w_up": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k2, (d_ff, d_model), jnp.float32) * s_out,
+    }
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), jnp.float32)
+        p["b_down"] = jnp.zeros((d_model,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------- GQA attention
+def init_attention(key, cfg):
+    """cfg needs: d_model, n_heads, n_kv_heads, head_dim, qkv_bias."""
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H * dh), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, KV * dh), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, KV * dh), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (H * dh, d), jnp.float32)
+              / np.sqrt(H * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * dh,), jnp.float32)
+    return p
+
+
+def attention_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q, k, v = (q + p["bq"].astype(dt), k + p["bk"].astype(dt),
+                   v + p["bv"].astype(dt))
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(p, x, cfg, *, positions=None):
+    """Full-sequence (train / prefill) GQA attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    o = multihead_attention(q, k, v, causal=cfg.causal,
+                            window=cfg.sliding_window)
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype), (k, v)
+
+
+def attention_decode(p, x, cfg, cache_k, cache_v, length):
+    """One-token decode; returns output and (new_k, new_v) to insert."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), length, jnp.int32)
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                             length, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                             length, 1)
+    o = decode_attention(q, ck, cv, length + 1, window=cfg.sliding_window)
+    return o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype), (ck, cv)

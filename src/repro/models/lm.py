@@ -1,0 +1,495 @@
+"""Unified language-model assembly for all assigned architectures.
+
+One init/apply pair covers the families:
+  dense/vlm/audio/encoder — uniform [attention + FFN] blocks (lax.scan),
+  moe   — leading dense blocks + MoE blocks (deepseek-v3, arctic),
+  ssm   — Mamba2 (SSD) blocks,
+  hybrid— Mamba2 backbone with a weight-shared attention block applied
+          every `hybrid_period` layers (zamba2).
+
+Entry points:
+  init_params(cfg, key)                  -> params pytree (f32 masters)
+  forward(params, cfg, batch, remat=..)  -> (logits, aux)   [train path]
+  loss_fn(params, cfg, batch)            -> (loss, metrics)
+  prefill(params, cfg, batch)            -> (logits, cache)
+  decode_step(params, cfg, tokens, cache)-> (logits, cache) [one token]
+  make_cache(cfg, B, S)                  -> zeroed cache pytree
+  param_counts(cfg)                      -> (total, active) for 6ND FLOPs
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, mla, moe, ssm
+from repro.parallel.constrain import constrain
+
+COMPUTE_DTYPE = jnp.bfloat16
+MTP_WEIGHT = 0.3
+# lax.scan unroll factor for the layer stacks. The dry-run sets this
+# high so XLA cost analysis sees every layer (a while loop body is
+# costed ONCE regardless of trip count); training keeps it at 1.
+SCAN_UNROLL = 1
+
+
+def _scan(f, init, xs):
+    return jax.lax.scan(f, init, xs, unroll=SCAN_UNROLL)
+
+
+# ------------------------------------------------------------------ blocks
+def init_dense_block(key, cfg, use_moe: bool):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm),
+         "ln2": layers.init_norm(ks[1], cfg.d_model, cfg.norm)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = mla.init_mla(ks[2], cfg)
+    else:
+        p["attn"] = layers.init_attention(ks[2], cfg)
+    if use_moe:
+        p["ffn"] = moe.init_moe(ks[3], cfg)
+    else:
+        p["ffn"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp,
+                                   bias=(cfg.mlp == "gelu" and cfg.qkv_bias))
+    return p
+
+
+def dense_block_apply(p, h, cfg, use_moe: bool):
+    """Full-sequence block. Returns (h, aux, kv) where kv is the
+    (k, v) / (c_kv, k_rope) pair for cache construction."""
+    hn = layers.apply_norm(h, p["ln1"], cfg.norm)
+    if cfg.attn_kind == "mla":
+        a, kv = mla.mla_apply(p["attn"], hn, cfg)
+    else:
+        a, kv = layers.attention_apply(p["attn"], hn, cfg)
+    h = h + a
+    hn = layers.apply_norm(h, p["ln2"], cfg.norm)
+    if use_moe:
+        f, aux = moe.moe_apply(p["ffn"], hn, cfg)
+    else:
+        f, aux = layers.mlp_apply(p["ffn"], hn, cfg.mlp), jnp.float32(0)
+    h = constrain(h + f, "dp", None, None)
+    return h, aux, kv
+
+
+def dense_block_decode(p, h, cfg, use_moe, ck, cv, length):
+    hn = layers.apply_norm(h, p["ln1"], cfg.norm)
+    if cfg.attn_kind == "mla":
+        a, (ck, cv) = mla.mla_decode(p["attn"], hn, cfg, ck, cv, length)
+    else:
+        a, (ck, cv) = layers.attention_decode(p["attn"], hn, cfg, ck, cv,
+                                              length)
+    h = h + a
+    hn = layers.apply_norm(h, p["ln2"], cfg.norm)
+    if use_moe:
+        f, _ = moe.moe_apply(p["ffn"], hn, cfg)
+    else:
+        f = layers.mlp_apply(p["ffn"], hn, cfg.mlp)
+    return h + f, ck, cv
+
+
+def init_mamba_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln": layers.init_norm(k1, cfg.d_model, cfg.norm),
+            "mixer": ssm.init_mamba2(k2, cfg)}
+
+
+def mamba_block_apply(p, h, cfg):
+    hn = layers.apply_norm(h, p["ln"], cfg.norm)
+    y, s_final = ssm.mamba2_apply(p["mixer"], hn, cfg)
+    # conv tail for decode handoff: last CONV_K-1 pre-conv features.
+    dt = h.dtype
+    proj = hn @ p["mixer"]["in_proj"].astype(dt)
+    _, xBC, _ = ssm._split_in(proj, cfg)
+    conv_tail = xBC[:, -(ssm.CONV_K - 1):, :]
+    return constrain(h + y, "dp", None, None), s_final, conv_tail
+
+
+def mamba_block_decode(p, h, cfg, s, conv):
+    hn = layers.apply_norm(h, p["ln"], cfg.norm)
+    y, s_new, conv_new = ssm.mamba2_decode(p["mixer"], hn, cfg, s, conv)
+    return h + y, s_new, conv_new
+
+
+# --------------------------------------------------------------- embedding
+def init_embed(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = {"tok": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                  jnp.float32) * 0.02,
+         "ln_f": layers.init_norm(ks[1], cfg.d_model, cfg.norm)}
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab),
+                                       jnp.float32)
+                     / np.sqrt(cfg.d_model))
+    if cfg.frame_dim:
+        p["frame_proj"] = (jax.random.normal(
+            ks[3], (cfg.frame_dim, cfg.d_model), jnp.float32)
+            / np.sqrt(cfg.frame_dim))
+    return p
+
+
+def embed_inputs(params, cfg, batch):
+    """Token / modality-stub embedding. Returns (h, loss_mask_prefix)."""
+    p = params["embed"]
+    if cfg.frame_dim:                                   # audio stub
+        h = batch["frames"].astype(COMPUTE_DTYPE) @ p["frame_proj"].astype(
+            COMPUTE_DTYPE)
+        return h, 0
+    tok = p["tok"].astype(COMPUTE_DTYPE)[batch["tokens"]]
+    if cfg.n_patches:                                   # vlm stub
+        h = jnp.concatenate(
+            [batch["patches"].astype(COMPUTE_DTYPE), tok], axis=1)
+        return h, cfg.n_patches
+    return tok, 0
+
+
+def lm_head(params, cfg, h):
+    p = params["embed"]
+    h = layers.apply_norm(h, p["ln_f"], cfg.norm)
+    w = (p["tok"].T if cfg.tie_embeddings else p["head"]).astype(h.dtype)
+    return constrain(h @ w, "dp", None, "tp")
+
+
+# ------------------------------------------------------------- init params
+def init_params(cfg, key):
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": init_embed(ks[0], cfg)}
+    if cfg.family in ("dense", "vlm", "audio", "encoder"):
+        keys = jax.random.split(ks[1], cfg.n_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: init_dense_block(k, cfg, False))(keys)
+    elif cfg.family == "moe":
+        nd = cfg.n_dense_layers
+        if nd:
+            keys = jax.random.split(ks[1], nd)
+            params["dense_blocks"] = jax.vmap(
+                lambda k: init_dense_block(k, cfg, False))(keys)
+        keys = jax.random.split(ks[2], cfg.n_layers - nd)
+        params["moe_blocks"] = jax.vmap(
+            lambda k: init_dense_block(k, cfg, True))(keys)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(ks[1], cfg.n_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: init_mamba_block(k, cfg))(keys)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.hybrid_period
+        keys = jax.random.split(ks[1], cfg.n_layers).reshape(
+            groups, cfg.hybrid_period, 2)
+        params["blocks"] = jax.vmap(jax.vmap(
+            lambda k: init_mamba_block(k, cfg)))(keys)
+        params["shared"] = init_dense_block(ks[3], cfg, False)
+        params["shared_in"] = (jax.random.normal(
+            ks[4], (2 * cfg.d_model, cfg.d_model), jnp.float32)
+            / np.sqrt(2 * cfg.d_model))
+    else:
+        raise ValueError(cfg.family)
+    if cfg.mtp:
+        params["mtp_proj"] = (jax.random.normal(
+            ks[5], (2 * cfg.d_model, cfg.d_model), jnp.float32)
+            / np.sqrt(2 * cfg.d_model))
+        params["mtp_block"] = init_dense_block(ks[6], cfg, False)
+    return params
+
+
+# ------------------------------------------------------------------ remat
+def _maybe_remat(fn, remat):
+    if remat == "none":
+        return fn
+    policy = {
+        "full": None,
+        "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    }[remat]
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------- forward
+def forward(params, cfg, batch, *, remat="none"):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    h, _ = embed_inputs(params, cfg, batch)
+    h = constrain(h, "dp", None, None)
+    aux = jnp.float32(0)
+
+    if cfg.family in ("dense", "vlm", "audio", "encoder"):
+        def body(carry, lp):
+            hh, ax = carry
+            hh, a, _ = dense_block_apply(lp, hh, cfg, False)
+            return (hh, ax + a), None
+        (h, aux), _ = _scan(_maybe_remat(body, remat), (h, aux),
+                                   params["blocks"])
+    elif cfg.family == "moe":
+        def dbody(carry, lp):
+            hh, ax = carry
+            hh, a, _ = dense_block_apply(lp, hh, cfg, False)
+            return (hh, ax + a), None
+
+        def mbody(carry, lp):
+            hh, ax = carry
+            hh, a, _ = dense_block_apply(lp, hh, cfg, True)
+            return (hh, ax + a), None
+        if cfg.n_dense_layers:
+            (h, aux), _ = _scan(_maybe_remat(dbody, remat), (h, aux),
+                                       params["dense_blocks"])
+        (h, aux), _ = _scan(_maybe_remat(mbody, remat), (h, aux),
+                                   params["moe_blocks"])
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            hh, = carry
+            hh, _, _ = mamba_block_apply(lp, hh, cfg)
+            return (hh,), None
+        (h,), _ = _scan(_maybe_remat(body, remat), (h,),
+                               params["blocks"])
+    elif cfg.family == "hybrid":
+        h0 = h
+
+        def gbody(carry, gp):
+            hh, = carry
+
+            def inner(c, lp):
+                hh2, = c
+                hh2, _, _ = mamba_block_apply(lp, hh2, cfg)
+                return (hh2,), None
+            (hh,), _ = _scan(inner, (hh,), gp)
+            zin = jnp.concatenate([hh, h0], axis=-1) @ params[
+                "shared_in"].astype(hh.dtype)
+            za, _, _ = dense_block_apply(params["shared"], zin, cfg, False)
+            return (hh + za,), None
+        (h,), _ = _scan(_maybe_remat(gbody, remat), (h,),
+                               params["blocks"])
+    logits = lm_head(params, cfg, h)
+    return logits, aux
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(logits, labels, mask):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def loss_fn(params, cfg, batch, *, remat="none"):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    if cfg.family == "audio":
+        labels, mask = batch["labels"], jnp.ones(batch["labels"].shape,
+                                                 jnp.float32)
+        loss = cross_entropy(logits, labels, mask)
+    else:
+        tokens = batch["tokens"]
+        npfx = cfg.n_patches
+        lg = logits[:, npfx:-1] if npfx else logits[:, :-1]
+        labels = tokens[:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32)
+        loss = cross_entropy(lg, labels, mask)
+        if cfg.mtp:
+            loss = loss + MTP_WEIGHT * _mtp_loss(params, cfg, batch, logits)
+    loss = loss + 0.01 * aux
+    return loss, {"loss": loss, "aux": aux}
+
+
+def _mtp_loss(params, cfg, batch, main_logits):
+    """DeepSeek-V3 multi-token prediction: predict t+2 from h_t ++ emb(t+1).
+
+    Reuses the final hidden state proxy (re-embedding main logits would
+    be expensive; we use the embedding of the ground-truth next token as
+    in the paper's MTP module)."""
+    tokens = batch["tokens"]
+    emb = params["embed"]["tok"].astype(COMPUTE_DTYPE)
+    h_in = emb[tokens[:, :-2]]
+    nxt = emb[tokens[:, 1:-1]]
+    z = jnp.concatenate([h_in, nxt], axis=-1) @ params["mtp_proj"].astype(
+        COMPUTE_DTYPE)
+    z, _, _ = dense_block_apply(params["mtp_block"], z, cfg, False)
+    logits = lm_head(params, cfg, z)
+    labels = tokens[:, 2:]
+    return cross_entropy(logits, labels, jnp.ones(labels.shape, jnp.float32))
+
+
+# ------------------------------------------------------------------ cache
+def make_cache(cfg, B, S):
+    """Zeroed serving cache sized for S total positions."""
+    c: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        c["k"] = jnp.zeros((L, B, S, cfg.n_kv_heads, cfg.head_dim),
+                           COMPUTE_DTYPE)
+        c["v"] = jnp.zeros_like(c["k"])
+    elif cfg.family == "moe":
+        if cfg.attn_kind == "mla":
+            c["k"] = jnp.zeros((L, B, S, cfg.kv_lora_rank), COMPUTE_DTYPE)
+            c["v"] = jnp.zeros((L, B, S, cfg.qk_rope_dim), COMPUTE_DTYPE)
+        else:
+            c["k"] = jnp.zeros((L, B, S, cfg.n_kv_heads, cfg.head_dim),
+                               COMPUTE_DTYPE)
+            c["v"] = jnp.zeros_like(c["k"])
+    elif cfg.family == "ssm":
+        d_inner, nheads, conv_dim = ssm.ssm_dims(cfg)
+        c["ssm"] = jnp.zeros((L, B, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                             jnp.float32)
+        c["conv"] = jnp.zeros((L, B, ssm.CONV_K - 1, conv_dim),
+                              COMPUTE_DTYPE)
+    elif cfg.family == "hybrid":
+        d_inner, nheads, conv_dim = ssm.ssm_dims(cfg)
+        G = cfg.n_layers // cfg.hybrid_period
+        c["ssm"] = jnp.zeros((G, cfg.hybrid_period, B, nheads,
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        c["conv"] = jnp.zeros((G, cfg.hybrid_period, B, ssm.CONV_K - 1,
+                               conv_dim), COMPUTE_DTYPE)
+        c["k"] = jnp.zeros((G, B, S, cfg.n_kv_heads, cfg.head_dim),
+                           COMPUTE_DTYPE)
+        c["v"] = jnp.zeros_like(c["k"])
+    return c
+
+
+# ---------------------------------------------------------------- prefill
+def prefill(params, cfg, batch):
+    """Full-sequence forward that also builds the serving cache."""
+    if cfg.family in ("encoder", "audio"):
+        logits, _ = forward(params, cfg, batch)
+        return logits, {"len": jnp.asarray(batch["frames"].shape[1]
+                                           if cfg.frame_dim else
+                                           batch["tokens"].shape[1],
+                                           jnp.int32)}
+    h, _ = embed_inputs(params, cfg, batch)
+    h = constrain(h, "dp", None, None)
+    S = h.shape[1]
+    cache: Dict[str, Any] = {"len": jnp.asarray(S, jnp.int32)}
+
+    if cfg.family in ("dense", "vlm"):
+        def body(hh, lp):
+            hh, _, kv = dense_block_apply(lp, hh, cfg, False)
+            return hh, kv
+        h, (ks, vs) = _scan(body, h, params["blocks"])
+        cache["k"], cache["v"] = ks, vs
+    elif cfg.family == "moe":
+        kparts, vparts = [], []
+        if cfg.n_dense_layers:
+            def dbody(hh, lp):
+                hh, _, kv = dense_block_apply(lp, hh, cfg, False)
+                return hh, kv
+            h, (kd, vd) = _scan(dbody, h, params["dense_blocks"])
+            kparts.append(kd)
+            vparts.append(vd)
+
+        def mbody(hh, lp):
+            hh, _, kv = dense_block_apply(lp, hh, cfg, True)
+            return hh, kv
+        h, (km, vm) = _scan(mbody, h, params["moe_blocks"])
+        kparts.append(km)
+        vparts.append(vm)
+        cache["k"] = jnp.concatenate(kparts, 0)
+        cache["v"] = jnp.concatenate(vparts, 0)
+    elif cfg.family == "ssm":
+        def body(hh, lp):
+            hh, s, conv = mamba_block_apply(lp, hh, cfg)
+            return hh, (s, conv)
+        h, (s, conv) = _scan(body, h, params["blocks"])
+        cache["ssm"], cache["conv"] = s, conv
+    elif cfg.family == "hybrid":
+        h0 = h
+
+        def gbody(hh, gp):
+            def inner(hh2, lp):
+                hh2, s, cv = mamba_block_apply(lp, hh2, cfg)
+                return hh2, (s, cv)
+            hh, (s, cv) = _scan(inner, hh, gp)
+            zin = jnp.concatenate([hh, h0], axis=-1) @ params[
+                "shared_in"].astype(hh.dtype)
+            hn = layers.apply_norm(zin, params["shared"]["ln1"], cfg.norm)
+            a, (k, v) = layers.attention_apply(params["shared"]["attn"],
+                                               hn, cfg)
+            z = zin + a
+            zn = layers.apply_norm(z, params["shared"]["ln2"], cfg.norm)
+            z = z + layers.mlp_apply(params["shared"]["ffn"], zn, cfg.mlp)
+            return hh + z, (s, cv, k, v)
+        h, (s, cv, ks, vs) = _scan(gbody, h, params["blocks"])
+        cache.update(ssm=s, conv=cv, k=ks, v=vs)
+    logits = lm_head(params, cfg, h)
+    return logits, cache
+
+
+# ----------------------------------------------------------------- decode
+def decode_step(params, cfg, tokens, cache):
+    """One decode step. tokens: [B, 1] int32. Returns (logits, cache)."""
+    length = cache["len"]
+    h = params["embed"]["tok"].astype(COMPUTE_DTYPE)[tokens]
+    if cfg.family in ("dense", "vlm", "moe"):
+        use_moe = cfg.family == "moe"
+        nd = cfg.n_dense_layers if use_moe else 0
+
+        def body_factory(is_moe):
+            def body(hh, xs):
+                lp, ck, cv = xs
+                hh, nk, nv = dense_block_decode(lp, hh, cfg, is_moe, ck, cv,
+                                                length)
+                return hh, (nk, nv)
+            return body
+        if use_moe and nd:
+            kd, km = cache["k"][:nd], cache["k"][nd:]
+            vd, vm = cache["v"][:nd], cache["v"][nd:]
+            h, (kd, vd) = _scan(body_factory(False), h,
+                                       (params["dense_blocks"], kd, vd))
+            h, (km, vm) = _scan(body_factory(True), h,
+                                       (params["moe_blocks"], km, vm))
+            cache["k"] = jnp.concatenate([kd, km], 0)
+            cache["v"] = jnp.concatenate([vd, vm], 0)
+        else:
+            blocks = params["moe_blocks"] if use_moe else params["blocks"]
+            h, (ks, vs) = _scan(body_factory(use_moe), h,
+                                       (blocks, cache["k"], cache["v"]))
+            cache["k"], cache["v"] = ks, vs
+    elif cfg.family == "ssm":
+        def body(hh, xs):
+            lp, s, cv = xs
+            hh, s, cv = mamba_block_decode(lp, hh, cfg, s, cv)
+            return hh, (s, cv)
+        h, (s, cv) = _scan(body, h,
+                                  (params["blocks"], cache["ssm"],
+                                   cache["conv"]))
+        cache["ssm"], cache["conv"] = s, cv
+    elif cfg.family == "hybrid":
+        h0 = h
+
+        def gbody(hh, xs):
+            gp, s, cv, ck, cvv = xs
+
+            def inner(hh2, ys):
+                lp, s1, c1 = ys
+                hh2, s1, c1 = mamba_block_decode(lp, hh2, cfg, s1, c1)
+                return hh2, (s1, c1)
+            hh, (s, cv) = _scan(inner, hh, (gp, s, cv))
+            zin = jnp.concatenate([hh, h0], axis=-1) @ params[
+                "shared_in"].astype(hh.dtype)
+            hn = layers.apply_norm(zin, params["shared"]["ln1"], cfg.norm)
+            a, (ck, cvv) = layers.attention_decode(
+                params["shared"]["attn"], hn, cfg, ck, cvv, length)
+            z = zin + a
+            zn = layers.apply_norm(z, params["shared"]["ln2"], cfg.norm)
+            z = z + layers.mlp_apply(params["shared"]["ffn"], zn, cfg.mlp)
+            return hh + z, (s, cv, ck, cvv)
+        h, (s, cv, ks, vs) = _scan(
+            gbody, h, (params["blocks"], cache["ssm"], cache["conv"],
+                       cache["k"], cache["v"]))
+        cache.update(ssm=s, conv=cv, k=ks, v=vs)
+    logits = lm_head(params, cfg, h)
+    cache["len"] = length + 1
+    return logits, cache
+
+
+# --------------------------------------------------------------- counting
+def param_counts(cfg):
+    """(total, active-per-token) parameter counts for MODEL_FLOPS=6ND."""
+    total = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(functools.partial(init_params, cfg),
+                       jax.random.PRNGKey(0))))
+    if cfg.family != "moe":
+        return total, total
+    # Active: total minus the non-selected experts' weights.
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    n_moe_layers = cfg.n_layers - cfg.n_dense_layers
+    inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total, total - inactive

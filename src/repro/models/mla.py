@@ -1,0 +1,115 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Prefill/train use the naive expansion (latent -> per-head K/V, blocked
+flash-style attention). Decode uses the *absorbed* form: queries are
+projected into the KV latent space so attention runs against the
+compressed cache [B, S, d_c] + shared rope keys [B, S, d_r] — the
+memory-optimal path for long-context serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+def init_mla(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "q_down": jax.random.normal(ks[0], (d, qlr), jnp.float32) * s,
+        "q_norm": {"w": jnp.ones((qlr,), jnp.float32)},
+        "q_up": jax.random.normal(ks[1], (qlr, H * (dn + dr)), jnp.float32)
+                / np.sqrt(qlr),
+        "kv_down": jax.random.normal(ks[2], (d, kvlr + dr), jnp.float32) * s,
+        "kv_norm": {"w": jnp.ones((kvlr,), jnp.float32)},
+        "kv_up": jax.random.normal(ks[3], (kvlr, H * (dn + dv)), jnp.float32)
+                 / np.sqrt(kvlr),
+        "wo": jax.random.normal(ks[4], (H * dv, d), jnp.float32)
+              / np.sqrt(H * dv),
+    }
+
+
+def _q_proj(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    dt = x.dtype
+    cq = layers.rms_norm(x @ p["q_down"].astype(dt), p["q_norm"]["w"])
+    q = (cq @ p["q_up"].astype(dt)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_latent(p, x, cfg, positions):
+    dt = x.dtype
+    kvlr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = x @ p["kv_down"].astype(dt)                   # [B,S,kvlr+dr]
+    c, k_rope = ckv[..., :kvlr], ckv[..., kvlr:]
+    c = layers.rms_norm(c, p["kv_norm"]["w"])
+    k_rope = layers.apply_rope(k_rope[..., None, :], positions,
+                               cfg.rope_theta)[..., 0, :]
+    return c, k_rope
+
+
+def mla_apply(p, x, cfg, *, positions=None):
+    """Train/prefill path with naive latent expansion."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    dt = x.dtype
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    c, k_rope = _kv_latent(p, x, cfg, positions)
+    kv = (c @ p["kv_up"].astype(dt)).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))],
+        axis=-1)
+    # Pad V to the QK head dim so the blocked kernel is reusable.
+    o = layers.multihead_attention(q, k,
+                                   jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                               (0, dn + dr - dv))),
+                                   causal=True)[..., :dv]
+    return o.reshape(B, S, H * dv) @ p["wo"].astype(dt), (c, k_rope)
+
+
+def mla_decode(p, x, cfg, cache_c, cache_kr, length):
+    """Absorbed decode: attention in the compressed latent space."""
+    B = x.shape[0]
+    H, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    kvlr = cfg.kv_lora_rank
+    dt = x.dtype
+    positions = jnp.full((B, 1), length, jnp.int32)
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)      # [B,1,H,dn/dr]
+    c_new, kr_new = _kv_latent(p, x, cfg, positions)
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache_c, c_new.astype(cache_c.dtype), length, 1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_new.astype(cache_kr.dtype), length, 1)
+
+    w_uk = p["kv_up"].astype(dt).reshape(kvlr, H, dn + dv)[..., :dn]
+    w_uv = p["kv_up"].astype(dt).reshape(kvlr, H, dn + dv)[..., dn:]
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)  # [B,1,H,kvlr]
+
+    scale = 1.0 / np.sqrt(dn + dr)
+    s = (jnp.einsum("bqhc,bsc->bhqs", q_lat.astype(jnp.float32),
+                    cc.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                      ckr.astype(jnp.float32))) * scale
+    valid = jnp.arange(cc.shape[1]) < (length + 1)
+    s = jnp.where(valid[None, None, None], s, layers.NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsc->bqhc", prob, cc.astype(jnp.float32))
+    v = jnp.einsum("bqhc,chv->bqhv", ctx, w_uv.astype(jnp.float32))
+    out = v.reshape(B, 1, H * dv).astype(dt) @ p["wo"].astype(dt)
+    return out, (cc, ckr)

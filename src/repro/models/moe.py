@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer (expert-parallel over the mesh 'model' axis).
+
+Capacity-based token-choice routing: positions inside each expert come
+from a cumulative sum over the routing one-hots; dispatch/combine are a
+scatter-add and a gather over an [E*C, D] buffer. This is the pjit
+baseline — GSPMD turns the expert einsums into expert-parallel compute
+with all-to-all-ish data movement. (A shard_map all-to-all variant is a
+perf hillclimb, see EXPERIMENTS.md §Perf.)
+
+Variants used by the assigned architectures:
+  * deepseek-v3: sigmoid scores, top-8 of 256, normalized weights, plus
+    one always-on shared expert (its own FFN).
+  * arctic: softmax top-2 of 128 routed experts in parallel with a dense
+    residual FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+def init_moe(key, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * s_out,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_mlp(
+            ks[4], d, cfg.moe_d_ff * cfg.n_shared_experts, "swiglu")
+    if cfg.dense_residual:
+        p["dense"] = layers.init_mlp(ks[5], d, cfg.d_ff, cfg.mlp)
+    return p
+
+
+def _route(scores, top_k):
+    w, idx = jax.lax.top_k(scores, top_k)       # [T, K]
+    return w, idx
+
+
+def moe_apply(p, x, cfg, *, capacity_factor=None):
+    """x: [B, S, D] -> [B, S, D]."""
+    B, S, D = x.shape
+    dt = x.dtype
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)  # [T, E]
+    if cfg.router_score == "sigmoid":                # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        gate_w, gate_i = _route(scores, K)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    else:                                            # softmax top-k
+        gate_w, gate_i = _route(logits, K)
+        gate_w = jax.nn.softmax(gate_w, axis=-1)
+
+    cf = capacity_factor or cfg.capacity_factor
+    C = max(1, int(np.ceil(T * K / E * cf)))
+
+    # Position of each (token, k) inside its expert via one-hot cumsum.
+    flat_e = gate_i.reshape(T * K)                               # [TK]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # [TK, E]
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)                  # exclusive
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [TK]
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)              # drop slot
+
+    # Dispatch: scatter tokens into [E*C + 1, D].
+    xk = jnp.repeat(xf, K, axis=0)                               # [TK, D]
+    buf = jnp.zeros((E * C + 1, D), dt).at[slot].add(xk)
+    buf = buf[: E * C].reshape(E, C, D)
+
+    # Expert FFN (einsum over expert-sharded weights).
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                   p["w_down"].astype(dt))
+
+    # Combine: gather each (token, k) result and weight it.
+    y = y.reshape(E * C, D)
+    y = jnp.concatenate([y, jnp.zeros((1, D), dt)], axis=0)
+    gathered = y[slot].reshape(T, K, D)
+    out = jnp.einsum("tkd,tk->td", gathered,
+                     gate_w.astype(dt) * keep.reshape(T, K).astype(dt))
+
+    if cfg.n_shared_experts:
+        out = out + layers.mlp_apply(p["shared"], xf, "swiglu")
+    if cfg.dense_residual:
+        out = out + layers.mlp_apply(p["dense"], xf, cfg.mlp)
+
+    # Router z-loss / load-balance aux (returned for the train loss).
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)       # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_i[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux

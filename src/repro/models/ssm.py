@@ -1,0 +1,183 @@
+"""Mamba2 (state-space duality / SSD) blocks.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks plus a linear inter-chunk state recurrence —
+the form that maps onto the TPU MXU (kernels/ssd_scan implements the
+intra-chunk core in Pallas). Decode is the O(1)-per-token recurrence on
+the [B, H, P, N] state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+CONV_K = 4  # depthwise conv kernel width
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state          # x + B + C (n_groups=1)
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    in_dim = 2 * d_inner + 2 * N + nheads           # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, in_dim), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32)
+                  * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": {"w": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": jax.random.normal(ks[2], (d_inner, d), jnp.float32)
+                    / np.sqrt(d_inner),
+    }
+
+
+def _split_in(proj, cfg):
+    d_inner, nheads, _ = ssm_dims(cfg)
+    N = cfg.ssm_state
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner: 2 * d_inner + 2 * N]
+    dt = proj[..., 2 * d_inner + 2 * N:]
+    return z, xBC, dt
+
+
+def segsum_exp(a):
+    """exp(segment-sums): L[i, j] = exp(sum_{k=j+1..i} a_k), lower-tri.
+
+    The exponent is masked to -inf BEFORE the exp: masking the result
+    would leave exp(+large) = inf in the discarded branch, and
+    d(where)/dx turns 0*inf into NaN in the backward pass.
+    """
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.exp(jnp.where(mask, d, -jnp.inf))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk):
+    """SSD scan. x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B,C: [b,S,N].
+
+    Returns y: [b,S,H,P] plus final state [b,H,P,N].
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:                 # short/ragged prompts: shrink chunk
+        chunk //= 2
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    dA = dtc * A[None, None, None]                       # [b,nc,cl,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                         # within-chunk
+    # Intra-chunk (quadratic in chunk length; the Pallas kernel target).
+    Lmat = segsum_exp(dA.transpose(0, 1, 3, 2))          # [b,nc,H,cl,cl]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # [b,nc,cl,cl]
+    att = scores[:, :, None] * Lmat                      # [b,nc,H,i,j]
+    xdt = xc * dtc[..., None]                            # [b,nc,cl,H,P]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", att, xdt)
+
+    # Chunk summaries -> inter-chunk recurrence.
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # [b,nc,cl,H]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Bc, dtc * decay_to_end, xc)      # [b,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1])                 # [b,nc,H]
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, H, P, N), x.dtype)
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)           # [b,nc,H,P,N]
+
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                       Cc, s_prevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, s_final
+
+
+def _conv1d(xBC, w, bias):
+    """Causal depthwise conv along seq. xBC: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1]] * w[i][None, None]
+              for i in range(K))
+    return jax.nn.silu(out + bias[None, None])
+
+
+def mamba2_apply(p, x, cfg):
+    """Full-sequence Mamba2 block. x: [B,S,D] -> ([B,S,D], final_state)."""
+    Bsz, S, D = x.shape
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    N = cfg.ssm_state
+    dt_ = x.dtype
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xBC, dt_raw = _split_in(proj, cfg)
+    xBC = _conv1d(xBC, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xs = xBC[..., :d_inner].reshape(Bsz, S, nheads, cfg.ssm_head_dim)
+    Bmat = xBC[..., d_inner: d_inner + N]
+    Cmat = xBC[..., d_inner + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, s_final = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                             Bmat.astype(jnp.float32),
+                             Cmat.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(dt_)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm"]["w"])
+    return y @ p["out_proj"].astype(dt_), s_final
+
+
+def mamba2_decode(p, x, cfg, ssm_state, conv_state):
+    """One-token recurrence.
+
+    x: [B,1,D]; ssm_state: [B,H,P,N]; conv_state: [B,CONV_K-1,conv_dim].
+    """
+    Bsz = x.shape[0]
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    N = cfg.ssm_state
+    dt_ = x.dtype
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xBC, dt_raw = _split_in(proj, cfg)
+
+    window = jnp.concatenate([conv_state, xBC], axis=1)  # [B,K,conv]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dt_))
+    xBC1 = jax.nn.silu(conv_out + p["conv_b"].astype(dt_))[:, None]
+    new_conv = window[:, 1:]
+
+    xs = xBC1[..., :d_inner].reshape(Bsz, nheads, cfg.ssm_head_dim)
+    Bv = xBC1[..., 0, d_inner: d_inner + N]              # [B,N]
+    Cv = xBC1[..., 0, d_inner + N:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"][None])           # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None])                        # [B,H]
+    s_new = (ssm_state * decay[..., None, None]
+             + jnp.einsum("bhp,bn,bh->bhpn", xs.astype(jnp.float32),
+                          Bv.astype(jnp.float32), dt))
+    y = jnp.einsum("bhpn,bn->bhp", s_new, Cv.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(dt_)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm"]["w"])
+    return y @ p["out_proj"].astype(dt_), s_new, new_conv

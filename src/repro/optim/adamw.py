@@ -1,0 +1,77 @@
+"""AdamW over parameter pytrees (pure functions, no external deps).
+
+Optimizer states (m, v) mirror the parameter pytree leaf-for-leaf, so
+the launcher shards them with the *same* PartitionSpecs as the params --
+model-dim sharding of the states comes for free (and ZeRO-style extra
+sharding over 'data' is a separate hillclimb lever, see
+parallel/zero.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray            # int32 []
+    m: Any                       # pytree like params
+    v: Any                       # pytree like params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig,
+                 lr_scale=1.0):
+    """Returns (updates, new_state). updates are to be ADDED to params."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        u = -lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                   + cfg.weight_decay * p.astype(jnp.float32))
+        return u.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    updates = jax.tree.map(lambda o: o[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda o: o[1], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[2], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return updates, AdamWState(step=step, m=m, v=v), gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,19 @@
+"""Learning-rate schedules as jnp-pure functions of the step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, total_steps, final_frac=0.1):
+    frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return final_frac + (1.0 - final_frac) * cos
+
+
+def linear_warmup_cosine(step, warmup_steps, total_steps, final_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup_steps, 1)
+    return jnp.where(s < warmup_steps, warm,
+                     cosine_schedule(step - warmup_steps,
+                                     max(total_steps - warmup_steps, 1),
+                                     final_frac))

@@ -1,0 +1,50 @@
+"""int8 gradient/delta compression with error feedback.
+
+Used around the *expensive* hierarchy level (cross-pod sync in
+parallel.hierarchical) -- exactly where the paper spends its T_L budget:
+pay full fidelity on cheap local links, compress on the costly ones.
+
+quantize/dequantize are per-tensor symmetric int8. Error feedback keeps
+the quantization residual locally and folds it into the next round, so
+the compressed local-SGD iteration stays unbiased in the long run.
+Trees of (q, scale) are kept as two parallel pytrees so every tree_map
+stays structure-aligned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _scale(x):
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+
+
+def quantize_tree(tree):
+    """tree (f32) -> (q_tree int8, scale_tree f32-scalar-per-leaf)."""
+    f32 = jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+    scales = jax.tree.map(_scale, f32)
+    q = jax.tree.map(
+        lambda x, s: jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8),
+        f32, scales)
+    return q, scales
+
+
+def dequantize_tree(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def compress_with_feedback(delta, err):
+    """(delta, err) -> ((q, scales), new_err).
+
+    The residual of this round's quantization is carried into the next
+    round's input (error feedback)."""
+    acc = jax.tree.map(lambda d, e: d.astype(jnp.float32) + e, delta, err)
+    q, scales = quantize_tree(acc)
+    deq = dequantize_tree(q, scales)
+    new_err = jax.tree.map(lambda a, d: a - d, acc, deq)
+    return (q, scales), new_err
+
+
+def zeros_like_err(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)

@@ -1,0 +1,48 @@
+"""Logical activation-sharding constraints.
+
+Model code annotates activations with *logical* axes ("dp", "tp", "sp");
+the launcher maps them to mesh axes and enables the constraints. Outside
+a mesh context (unit tests, CPU smoke runs) constraints are no-ops, so
+model code never depends on the mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _mapping():
+    return getattr(_state, "mapping", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mapping):
+    """mapping: dict logical-name -> mesh axis (str, tuple, or None)."""
+    prev = _mapping()
+    _state.mapping = dict(mapping)
+    try:
+        yield
+    finally:
+        _state.mapping = prev
+
+
+def constrain(x, *logical_axes):
+    m = _mapping()
+    if m is None:
+        return x
+    spec = P(*[m.get(a) if isinstance(a, str) else a for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# Standard rule sets.
+def rules_single_pod():
+    return {"dp": "data", "tp": "model", "sp": "data"}
+
+
+def rules_multi_pod():
+    return {"dp": ("pod", "data"), "tp": "model", "sp": ("pod", "data")}

@@ -1,0 +1,168 @@
+"""Hierarchical gradient synchronization -- the paper's DT/T_L insight
+transplanted to the TPU mesh (DESIGN.md §2.2).
+
+The paper's distributed tree passes a lock within a machine element up
+to T_L,i times before paying for a cross-element transfer. Here the
+"element" is a pod and the "lock passing" is a parameter update: each
+pod trains on its own replica (all intra-pod collectives run every
+step over fast ICI), and the expensive cross-pod synchronization runs
+only every `T_pod` steps ("local SGD at the pod level"). T_pod = 1
+recovers exact synchronous data parallelism; larger T_pod trades
+staleness for cross-pod communication avoidance -- the same
+locality/fairness dial as the paper's T_L.
+
+SPMD realization: pod-local replicas are a *leading array axis* of size
+n_pods sharded over the mesh's 'pod' axis; the per-pod forward/backward
+is a vmap over that axis, so XLA keeps all of it pod-local and the only
+cross-pod collective is the periodic mean (visible as a single
+all-reduce in the lowered HLO -- the dry-run counts its bytes).
+
+Optional int8 compression (paper analogue: shave bytes exactly on the
+expensive level): pods exchange their parameter delta since the last
+sync, quantized to int8 with a shared per-tensor scale and summed in
+int16 on the wire (2x fewer collective bytes than f32, 4x fewer than
+two-round f32 schemes), with error feedback keeping the scheme
+asymptotically exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_updates
+
+
+class HierState(NamedTuple):
+    params: Any        # [n_pods, ...] podded replicas
+    opt: Any           # podded AdamWState
+    anchor: Any        # params at last cross-pod sync (compressed mode)
+    err: Any           # error-feedback buffer, podded (compressed mode)
+    step: jnp.ndarray  # int32 []
+
+
+def _pod_axis(tree, n_pods):
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape), tree)
+
+
+def init_hier_state(cfg, key, n_pods: int, *, compress: bool = False
+                    ) -> HierState:
+    params = lm.init_params(cfg, key)
+    podded = _pod_axis(params, n_pods)
+    opt = adamw_init(params)
+    opt_p = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape)
+        if hasattr(p, "shape") else p, opt)
+    anchor = _pod_axis(params, n_pods) if compress else jax.tree.map(
+        lambda p: jnp.zeros((), p.dtype), params)  # placeholder when off
+    err = (jax.tree.map(lambda p: jnp.zeros((n_pods,) + p.shape,
+                                            jnp.float32), params)
+           if compress else jax.tree.map(
+               lambda p: jnp.zeros((), jnp.float32), params))
+    return HierState(params=podded, opt=opt_p, anchor=anchor, err=err,
+                     step=jnp.zeros((), jnp.int32))
+
+
+def _mean_sync(params_p, anchor, err, n_pods):
+    """Plain cross-pod average (one f32 all-reduce over 'pod')."""
+    avg = jax.tree.map(lambda p: jnp.mean(p, axis=0), params_p)
+    return _pod_axis(avg, n_pods), anchor, err
+
+
+def _compressed_sync(params_p, anchor_p, err, n_pods):
+    """int8-quantized delta exchange with shared scale + error feedback.
+
+    The anchor is PODDED (each pod keeps an identical copy as a row of a
+    'pod'-sharded array) so the whole update is symmetric: after the
+    int8 payload exchange every pod computes the same sum locally and
+    no cross-pod broadcast/selection is ever needed. Cross-pod wire =
+    1 byte/element (+ one f32 scalar per tensor for the shared scale).
+    """
+    def one(p, a, e):
+        delta = p.astype(jnp.float32) - a.astype(jnp.float32)
+        acc = delta + e
+        # shared per-tensor scale: max|acc| over every pod (scalar coll.)
+        s = jnp.maximum(jnp.max(jnp.abs(acc)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(acc / s), -127, 127).astype(jnp.int8)
+        new_e = acc - q.astype(jnp.float32) * s
+        # The big collective. Wire dtype matters: XLA widens the
+        # accumulator of int16/bf16 sums to 32 bits (measured: s32/f32
+        # on the wire, no win -- EXPERIMENTS.md §Perf HC3 iters 2-3).
+        # For two pods we sidestep reduction-widening entirely: flip the
+        # int8 payload across the pod axis (lowers to a
+        # collective-permute of s8 -- 1 byte/elem on the wire, 4x less
+        # than f32) and sum locally; every pod row ends up identical.
+        if n_pods == 2:
+            q_other = jax.lax.optimization_barrier(jnp.flip(q, axis=0))
+            qsum = q.astype(jnp.float32) + q_other.astype(jnp.float32)
+        else:
+            qsum = jnp.broadcast_to(
+                jnp.sum(q.astype(jnp.float32), axis=0, keepdims=True),
+                q.shape)
+        mean_delta = qsum * (s / n_pods)
+        new_a = (a.astype(jnp.float32) + mean_delta).astype(a.dtype)
+        new_p = new_a.astype(p.dtype)
+        return new_p, new_a, new_e
+
+    out = jax.tree.map(one, params_p, anchor_p, err)
+    pick = lambda i: jax.tree.map(
+        lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), pick(1), pick(2)
+
+
+def build_hier_train_step(cfg, n_pods: int, T_pod: int,
+                          opt_cfg: AdamWConfig = AdamWConfig(), *,
+                          compress: bool = False, remat: str = "dots",
+                          sync_mode: str = "cond"):
+    """Returns hier_train_step(state, batch_podded) -> (state, metrics).
+
+    batch_podded leaves are [n_pods, B/n_pods, ...] (shard the global
+    batch's leading dim over 'pod' then 'data').
+
+    sync_mode: "cond" (runtime step % T_pod check -- production),
+    "always" / "never" (statically fixed -- used by the dry-run to
+    measure the sync and no-sync HLO separately, since lax.cond keeps
+    both branches in the module and would double-count wire bytes).
+    """
+
+    def local_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            functools.partial(lm.loss_fn, remat=remat), has_aux=True)(
+            params, cfg, batch)
+        return loss, grads
+
+    def step_fn(state: HierState, batch_p):
+        loss, grads = jax.vmap(local_grads)(state.params, batch_p)
+
+        upd = jax.vmap(lambda g, o, p: adamw_update(g, o, p, opt_cfg))(
+            grads, state.opt, state.params)
+        updates, opt, gnorm = upd
+        params = apply_updates(state.params, updates)
+
+        do_sync = (state.step + 1) % T_pod == 0
+        sync = _compressed_sync if compress else _mean_sync
+
+        def do(args):
+            p, a, e = args
+            return sync(p, a, e, n_pods)
+
+        if sync_mode == "always":
+            params, anchor, err = do((params, state.anchor, state.err))
+            do_sync = jnp.bool_(True)
+        elif sync_mode == "never":
+            anchor, err = state.anchor, state.err
+            do_sync = jnp.bool_(False)
+        else:
+            params, anchor, err = jax.lax.cond(
+                do_sync, do, lambda args: args,
+                (params, state.anchor, state.err))
+        metrics = {"loss": jnp.mean(loss), "grad_norm": jnp.mean(gnorm),
+                   "synced": do_sync.astype(jnp.int32)}
+        return HierState(params=params, opt=opt, anchor=anchor, err=err,
+                         step=state.step + 1), metrics
+
+    return step_fn

@@ -1,0 +1,242 @@
+"""Parameter/activation sharding rules (DP/TP/EP/SP over the mesh).
+
+`param_spec_tree` walks a params pytree and assigns a PartitionSpec per
+leaf from its path + shape -- megatron-style tensor parallelism over the
+'model' axis, 2D expert parallelism for MoE stacks (experts over
+'model', expert-FFN width over 'data': a 671B expert bank shards over
+all 256 chips of a pod, not just the 16-way TP axis), replication for
+norms and small vectors. Optional `fsdp=True` additionally shards every
+remaining large parameter dim over the DP axes (ZeRO-3 style) -- the
+fit-or-die lever for giant-model training; optimizer states mirror the
+parameter specs leaf-for-leaf.
+
+`batch_specs` / `cache_specs` shard inputs over the data axes;
+long-context single-sample decode switches the cache to sequence
+parallelism (DESIGN.md §6). All assignments are divisibility-guarded:
+a dim that does not divide by the axis size stays unsharded rather than
+relying on GSPMD padding (pad-free layouts keep collective sizes
+honest).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(shape, dim, mesh, axes) -> bool:
+    return dim < len(shape) and shape[dim] % axis_size(mesh, axes) == 0
+
+
+class _Rule:
+    """Accumulates per-dim assignments with divisibility guards. A mesh
+    axis may appear at most once across the whole spec."""
+
+    def __init__(self, shape, mesh):
+        self.shape = shape
+        self.mesh = mesh
+        self.spec = [None] * len(shape)
+        self.used = set()
+
+    def _names(self, axes):
+        return (axes,) if isinstance(axes, str) else tuple(axes)
+
+    def put(self, dim, axes):
+        if (axes is not None and self.spec[dim] is None
+                and not (set(self._names(axes)) & self.used)
+                and _fits(self.shape, dim, self.mesh, axes)):
+            self.spec[dim] = axes
+            self.used.update(self._names(axes))
+        return self
+
+    def fsdp_largest(self, axes):
+        """Shard the largest still-unsharded dim over `axes` (ZeRO-3).
+        Falls back to the unused subset of `axes` when some of them are
+        already taken (e.g. expert tensors already shard 'data')."""
+        free = tuple(a for a in self._names(axes) if a not in self.used)
+        if not free:
+            return self
+        order = np.argsort([-s for s in self.shape])
+        for dim in order:
+            if self.spec[dim] is None and _fits(self.shape, int(dim),
+                                                self.mesh, free):
+                self.spec[int(dim)] = free if len(free) > 1 else free[0]
+                self.used.update(free)
+                break
+        return self
+
+    def build(self) -> P:
+        return P(*self.spec)
+
+
+def _spec_for(path: str, shape, mesh, dp, fsdp: bool) -> P:
+    nd = len(shape)
+    r = _Rule(shape, mesh)
+
+    def final():
+        if fsdp and nd >= 2 and int(np.prod(shape)) >= (1 << 20):
+            r.fsdp_largest(dp)
+        return r.build()
+
+    # MoE expert banks: [.., E, D, F] / [.., E, F, D] -- E over 'model',
+    # the FFN width over 'data' (2D expert-parallel layout).
+    for k, fdim in (("ffn/w_gate", -1), ("ffn/w_up", -1),
+                    ("ffn/w_down", -2)):
+        if path.endswith(k) and nd >= 3:
+            r.put(nd - 3, "model")
+            r.put(nd + fdim, "data")
+            return final()
+    if path.endswith("ffn/router"):
+        return r.build()
+    # Embedding / head: shard the vocab dimension.
+    if path.endswith("embed/tok"):
+        r.put(nd - 2, "model")
+        return final()
+    if path.endswith("embed/head") or "frame_proj" in path:
+        r.put(nd - 1, "model")
+        return final()
+    # Attention projections.
+    for k in ("wq", "wk", "wv", "q_up", "kv_up"):
+        if path.endswith("attn/" + k):
+            r.put(nd - 1, "model")
+            return final()
+    if path.endswith("attn/wo"):
+        r.put(nd - 2, "model")
+        return final()
+    for k in ("q_down", "kv_down"):
+        if path.endswith("attn/" + k):
+            return final()                     # small LoRA-down: replicated
+    if path.endswith(("bq", "bk", "bv")):
+        r.put(nd - 1, "model")
+        return r.build()
+    # Dense FFN (incl. shared expert / dense residual / plain mlp).
+    if path.endswith(("w_gate", "w_up")):
+        r.put(nd - 1, "model")
+        return final()
+    if path.endswith("w_down"):
+        r.put(nd - 2, "model")
+        return final()
+    if path.endswith("b_up"):
+        r.put(nd - 1, "model")
+        return r.build()
+    # Mamba2.
+    if path.endswith("in_proj"):
+        r.put(nd - 1, "model")
+        return final()
+    if path.endswith("out_proj"):
+        r.put(nd - 2, "model")
+        return final()
+    if path.endswith(("conv_w", "conv_b")):
+        r.put(nd - 1, "model")
+        return r.build()
+    if path.endswith(("mtp_proj", "shared_in")):
+        r.put(nd - 1, "model")
+        return final()
+    # Norms, biases, scalars: replicated.
+    return r.build()
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec_tree(params_shape: Any, mesh: Mesh, *, fsdp: bool = False,
+                    fsdp_axes=None):
+    """fsdp_axes: mesh axes for the ZeRO-3 dim (default: all DP axes).
+    Passing ("data",) on a multi-pod mesh keeps parameter gathers on
+    intra-pod ICI and off the slow pod links (hillclimb lever)."""
+    dp = tuple(fsdp_axes) if fsdp_axes is not None else dp_axes(mesh)
+
+    def assign(path, leaf):
+        return _spec_for(path_str(path), leaf.shape, mesh, dp, fsdp)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def param_sharding_tree(params_shape: Any, mesh: Mesh, *,
+                        fsdp: bool = False):
+    specs = param_spec_tree(params_shape, mesh, fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh):
+    """Shard every batch leaf on its leading (batch) dim over DP axes."""
+    dp = dp_axes(mesh)
+
+    def assign(leaf):
+        r = _Rule(leaf.shape, mesh)
+        r.put(0, dp)
+        return r.build()
+
+    return jax.tree.map(assign, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, *, seq_parallel: bool,
+                seq_axis_2d=None, seq_parallel_axes=None):
+    """Serving-cache sharding.
+
+    Layout reminders: attention caches are [L, B, S, ...] (GQA: +KV, dh;
+    MLA: +latent) or [G, B, S, KV, dh] for hybrids; ssm states are
+    [L, B, H, P, N] / [G, per, B, H, P, N]; conv states [L, B, K, C] /
+    [G, per, B, K, C]; 'len' is a scalar. Batch shards over the DP axes;
+    with seq_parallel=True (long single-sequence decode) the attention
+    cache shards S instead.
+    """
+    dp = dp_axes(mesh)
+
+    def assign(path, leaf):
+        name = path_str(path)
+        nd = len(leaf.shape)
+        r = _Rule(leaf.shape, mesh)
+        if nd == 0:
+            return r.build()
+        if name in ("k", "v") and nd >= 4:
+            b_dim, s_dim = 1, 2                 # [L|G, B, S, ...]
+            if seq_parallel:
+                r.put(s_dim, seq_parallel_axes or dp)
+            else:
+                r.put(b_dim, dp)
+                if seq_axis_2d is not None:
+                    # 2D decode layout (hillclimb): S over 'model' keeps
+                    # head dims unsharded -- GSPMD then distributes the
+                    # softmax over S shards instead of resharding
+                    # padded head-sharded tensors.
+                    r.put(s_dim, seq_axis_2d)
+                    return r.build()
+            if nd == 5:
+                r.put(3, "model")               # KV heads (if divisible)
+            return r.build()
+        if name == "ssm":
+            b_dim = 2 if nd >= 6 else 1
+            r.put(b_dim, dp)
+            r.put(b_dim + 1, "model")           # SSD heads
+            return r.build()
+        if name == "conv":
+            b_dim = 2 if nd >= 5 else 1
+            r.put(b_dim, dp)
+            r.put(nd - 1, "model")              # conv features
+            return r.build()
+        r.put(0, dp)
+        return r.build()
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)

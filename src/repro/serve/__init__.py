@@ -1,0 +1,6 @@
+from repro.serve.steps import (build_decode_step, build_prefill_step,
+                               cache_shapes)
+from repro.serve.store import VersionedStore
+
+__all__ = ["build_decode_step", "build_prefill_step", "cache_shapes",
+           "VersionedStore"]

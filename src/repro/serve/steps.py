@@ -1,0 +1,40 @@
+"""Serving step builders.
+
+`serve_step` for the decode shapes is exactly what the task defines:
+one new token against a KV cache holding `seq_len` past positions. The
+cache pytree layout comes from models.lm.make_cache; cache sharding
+specs come from parallel.sharding.cache_specs (batch-sharded for
+decode_32k, sequence-sharded for long_500k).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def cache_shapes(cfg, B: int, S: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of the serving cache (no allocation)."""
+    return jax.eval_shape(lambda: lm.make_cache(cfg, B, S))
+
+
+def build_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def build_decode_step(cfg, *, greedy: bool = True):
+    def decode_step(params, tokens, cache):
+        logits, cache = lm.decode_step(params, cfg, tokens, cache)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        else:
+            nxt = tokens[:, -1]
+        return nxt[:, None], cache
+
+    return decode_step

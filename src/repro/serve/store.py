@@ -1,0 +1,109 @@
+"""Versioned parameter store -- the paper's DC/T_DC insight transplanted
+to serving (DESIGN.md §2.2).
+
+The paper's distributed counter shards reader bookkeeping over physical
+counters (one per T_DC processes) so readers touch a nearby counter and
+only the rare writer pays to visit all of them. Here decode workers are
+the readers and a weight swap (new checkpoint going live) is the
+writer:
+
+  * every worker is assigned to one of C = ceil(W / T_DC) physical
+    counters (arrive/depart pairs) -- readers only ever touch their own
+    counter (cheap, contention-free);
+  * the swapper flips every counter into WRITE mode, waits for each to
+    drain (arrived == departed), installs new params, then resets the
+    counters back to READ mode -- exactly Listing 6/7 of the paper, with
+    the same correctness argument (§4.1 Reader & Writer).
+
+The control plane is host-side (threading) because weight swaps are a
+host-driven event; the data plane (params) stays in JAX arrays.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Callable, List
+
+
+class _Counter:
+    __slots__ = ("arrived", "departed", "write_mode", "cv")
+
+    def __init__(self):
+        self.arrived = 0
+        self.departed = 0
+        self.write_mode = False
+        self.cv = threading.Condition()
+
+
+class VersionedStore:
+    """MRSW parameter store with sharded reader counters."""
+
+    def __init__(self, params: Any, *, n_workers: int = 8, T_DC: int = 4):
+        self._params = params
+        self._version = 0
+        self.T_DC = max(1, T_DC)
+        self.n_counters = max(1, -(-n_workers // self.T_DC))
+        self._counters: List[_Counter] = [_Counter()
+                                          for _ in range(self.n_counters)]
+        self._swap_lock = threading.Lock()     # one writer at a time
+
+    def counter_of(self, worker_id: int) -> int:
+        return (worker_id // self.T_DC) % self.n_counters
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @contextmanager
+    def reader_view(self, worker_id: int):
+        """Acquire a read view: (params, version). Readers spin only on
+        their own counter (the T_DC locality property)."""
+        c = self._counters[self.counter_of(worker_id)]
+        with c.cv:
+            while c.write_mode:
+                c.cv.wait()
+            c.arrived += 1
+        try:
+            yield self._params, self._version
+        finally:
+            with c.cv:
+                c.departed += 1
+                c.cv.notify_all()
+
+    def swap(self, new_params: Any) -> int:
+        """Writer: block new readers on every counter, drain, install."""
+        with self._swap_lock:
+            for c in self._counters:           # set_counters_to_WRITE()
+                with c.cv:
+                    c.write_mode = True
+            for c in self._counters:           # verify drained (paper §4.1)
+                with c.cv:
+                    while c.arrived != c.departed:
+                        c.cv.wait()
+            self._params = new_params
+            self._version += 1
+            for c in self._counters:           # reset_counters()
+                with c.cv:
+                    c.arrived = 0
+                    c.departed = 0
+                    c.write_mode = False
+                    c.cv.notify_all()
+            return self._version
+
+
+class Batcher:
+    """Tiny request batcher for the serving example: collects up to
+    `max_batch` token requests, pads, and runs one decode step."""
+
+    def __init__(self, decode_fn: Callable, max_batch: int):
+        self.decode_fn = decode_fn
+        self.max_batch = max_batch
+
+    def run(self, requests, params, cache):
+        import jax.numpy as jnp
+        toks = jnp.asarray([[r] for r in requests[: self.max_batch]],
+                           jnp.int32)
+        pad = self.max_batch - toks.shape[0]
+        if pad:
+            toks = jnp.pad(toks, ((0, pad), (0, 0)))
+        return self.decode_fn(params, toks, cache)

@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, build_eval_step, build_train_step
+
+__all__ = ["TrainState", "build_eval_step", "build_train_step"]

@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests (task spec): instantiate the REDUCED
+config of each family and run one forward/train step on CPU, asserting
+output shapes and no NaNs; plus one prefill+decode step for decoder
+archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, SHAPES, \
+    cell_supported
+from repro.data import batch_for
+from repro.models import lm
+
+
+def _expected_logit_len(cfg, S):
+    return S + cfg.n_patches if cfg.n_patches else S
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_smoke_config(arch)
+    B, S = 2, 16
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = jax.tree.map(jnp.asarray, batch_for(cfg, B, S, 0))
+
+    @jax.jit
+    def fwd_and_grad(params, batch):
+        logits, _ = lm.forward(params, cfg, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, cfg, batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        return logits, loss, gnorm
+
+    logits, loss, gnorm = fwd_and_grad(params, batch)
+    assert logits.shape == (B, _expected_logit_len(cfg, S), cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_smoke_config(a).has_decode])
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    B, S, extra = 1, 16, 8
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    batch = jax.tree.map(jnp.asarray, batch_for(cfg, B, S, 0))
+    logits, cache = lm.prefill(params, cfg, batch)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    full = lm.make_cache(cfg, B, S + extra)
+    cache = jax.tree.map(
+        lambda z, c: jax.lax.dynamic_update_slice(
+            z, c.astype(z.dtype), (0,) * z.ndim) if z.ndim else c,
+        full, cache)
+    tok = jnp.asarray([[5]], jnp.int32)
+    step = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+    for _ in range(3):
+        lg, cache = step(params, tok, cache)
+        assert lg.shape == (B, 1, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
+        tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+def test_decode_matches_prefill_dense():
+    """Teacher-forced decode reproduces the full-forward logits."""
+    cfg = get_smoke_config("qwen2_0p5b")
+    B, S = 1, 12
+    params = lm.init_params(cfg, jax.random.PRNGKey(2))
+    batch = jax.tree.map(jnp.asarray, batch_for(cfg, B, S, 0))
+    full_logits, _ = lm.forward(params, cfg, batch)
+
+    pre = {"tokens": batch["tokens"][:, :4]}
+    logits, cache = lm.prefill(params, cfg, pre)
+    grown = lm.make_cache(cfg, B, S)
+    cache = jax.tree.map(
+        lambda z, c: jax.lax.dynamic_update_slice(
+            z, c.astype(z.dtype), (0,) * z.ndim) if z.ndim else c,
+        grown, cache)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 3], np.float32),
+        np.asarray(full_logits[:, 3], np.float32), atol=0.06, rtol=0.06)
+    step = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+    for t in range(4, S):
+        lg, cache = step(params, batch["tokens"][:, t][:, None], cache)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            atol=0.06, rtol=0.06)
+
+
+def test_decode_matches_prefill_ssm():
+    cfg = get_smoke_config("mamba2_130m")
+    B, S = 1, 16
+    params = lm.init_params(cfg, jax.random.PRNGKey(3))
+    batch = jax.tree.map(jnp.asarray, batch_for(cfg, B, S, 0))
+    full_logits, _ = lm.forward(params, cfg, batch)
+    pre = {"tokens": batch["tokens"][:, :8]}
+    logits, cache = lm.prefill(params, cfg, pre)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 7], np.float32),
+        np.asarray(full_logits[:, 7], np.float32), atol=0.08, rtol=0.08)
+    step = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+    for t in range(8, S):
+        lg, cache = step(params, batch["tokens"][:, t][:, None], cache)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            atol=0.08, rtol=0.08)
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    expect = {
+        "starcoder2_7b": (32, 4608, 36, 4, 18432, 49152),
+        "olmo_1b": (16, 2048, 16, 16, 8192, 50304),
+        "h2o_danube_1p8b": (24, 2560, 32, 8, 6912, 32000),
+        "qwen2_0p5b": (24, 896, 14, 2, 4864, 151936),
+        "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+        "deepseek_v3_671b": (61, 7168, 128, 128, 18432, 129280),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+        "zamba2_2p7b": (54, 2560, 32, 32, 10240, 32000),
+        "mamba2_130m": (24, 768, 0, 0, 0, 50280),
+    }
+    for arch, (L, d, H, KV, ff, V) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, H, KV, ff, V), arch
+    # MoE specifics from the assignment line.
+    ds = get_config("deepseek_v3_671b")
+    assert (ds.n_experts, ds.top_k, ds.moe_d_ff) == (256, 8, 2048)
+    assert ds.attn_kind == "mla" and ds.mtp and ds.n_shared_experts == 1
+    ar = get_config("arctic_480b")
+    assert (ar.n_experts, ar.top_k, ar.dense_residual) == (128, 2, True)
+    zb = get_config("zamba2_2p7b")
+    assert zb.ssm_state == 64
+    mb = get_config("mamba2_130m")
+    assert mb.ssm_state == 128
+
+
+def test_cell_support_matrix():
+    """Shape-skip rules follow the task spec."""
+    skips = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = cell_supported(cfg, shape)
+            skips[(arch, sname)] = ok
+    # encoder: no decode shapes
+    assert not skips[("hubert_xlarge", "decode_32k")]
+    assert not skips[("hubert_xlarge", "long_500k")]
+    # pure full-attention: no long_500k
+    for a in ("olmo_1b", "qwen2_0p5b", "internvl2_2b", "deepseek_v3_671b",
+              "arctic_480b"):
+        assert not skips[(a, "long_500k")], a
+        assert skips[(a, "decode_32k")], a
+    # SWA / SSM / hybrid: long_500k runs
+    for a in ("starcoder2_7b", "h2o_danube_1p8b", "zamba2_2p7b",
+              "mamba2_130m"):
+        assert skips[(a, "long_500k")], a
+    # train/prefill run everywhere
+    for a in ARCH_IDS:
+        assert skips[(a, "train_4k")] and skips[(a, "prefill_32k")]
+
+
+def test_param_counts_sane():
+    """Full-config parameter totals are in the advertised ballpark."""
+    expect_range = {
+        "starcoder2_7b": (6e9, 9e9),
+        "olmo_1b": (0.9e9, 1.5e9),
+        "h2o_danube_1p8b": (1.4e9, 2.2e9),
+        "qwen2_0p5b": (0.3e9, 0.7e9),
+        "internvl2_2b": (1.5e9, 2.6e9),
+        "deepseek_v3_671b": (600e9, 720e9),
+        "arctic_480b": (420e9, 520e9),
+        "hubert_xlarge": (0.7e9, 1.3e9),
+        "zamba2_2p7b": (2.2e9, 3.3e9),
+        "mamba2_130m": (0.1e9, 0.2e9),
+    }
+    from repro.models.lm import param_counts
+    for arch, (lo, hi) in expect_range.items():
+        total, active = param_counts(get_config(arch))
+        assert lo <= total <= hi, f"{arch}: {total / 1e9:.2f}B not in " \
+                                  f"[{lo / 1e9}, {hi / 1e9}]"
+        assert active <= total

@@ -1,0 +1,65 @@
+"""Elastic checkpoint restore: a checkpoint written on 1 device restores
+onto an 8-device mesh (and trains on), proven in a subprocess because
+the host device count is locked at first jax init."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from tests.test_system import TINY
+
+
+def test_elastic_restore_other_mesh(tmp_path):
+    # Save on this process (1 CPU device).
+    from repro.train.step import init_state
+    state = init_state(TINY, jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 5, state)
+
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, {repr(os.path.join(os.path.dirname(__file__), "..", "src"))})
+        sys.path.insert(0, {repr(os.path.join(os.path.dirname(__file__), ".."))})
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from tests.test_system import TINY
+        from repro.checkpoint import load_checkpoint
+        from repro.parallel import sharding as shd
+        from repro.train.step import build_train_step, init_state
+        from repro.data import batch_for
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        state = jax.eval_shape(lambda k: init_state(TINY, k),
+                               jax.random.PRNGKey(0))
+        pspecs = shd.param_spec_tree(state.params, mesh)
+        sspecs = type(state)(params=pspecs,
+                             opt=type(state.opt)(step=P(), m=pspecs,
+                                                 v=pspecs),
+                             step=P())
+        shard_tree = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        restored, manifest = load_checkpoint(
+            {repr(str(tmp_path))}, 5, state, sharding_tree=shard_tree)
+        assert manifest["step"] == 5
+        # Train one step on the new mesh to prove the state is usable.
+        step_fn = jax.jit(build_train_step(TINY, remat="none"))
+        batch = jax.tree.map(jnp.asarray, batch_for(TINY, 4, 32, 0))
+        with mesh:
+            new_state, metrics = step_fn(restored, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert int(new_state.step) == 1
+        print("ELASTIC_OK", float(metrics["loss"]))
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "ELASTIC_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,136 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret
+mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(7)
+
+
+# ------------------------------------------------------ flash attention
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,dh,causal,win,dtype", [
+    (2, 128, 128, 4, 2, 32, True, None, jnp.float32),
+    (1, 256, 256, 8, 8, 16, True, 64, jnp.float32),
+    (2, 128, 256, 4, 1, 64, False, None, jnp.float32),
+    (1, 64, 64, 2, 2, 128, True, None, jnp.bfloat16),
+    (1, 128, 128, 6, 3, 32, True, 32, jnp.float32),
+])
+def test_flash_attention_matches_oracle(B, Sq, Skv, H, KV, dh, causal, win,
+                                        dtype):
+    q = jnp.asarray(RNG.randn(B, Sq, H, dh), dtype)
+    k = jnp.asarray(RNG.randn(B, Skv, KV, dh), dtype)
+    v = jnp.asarray(RNG.randn(B, Skv, KV, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=win,
+                              block_q=64, block_kv=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_independent():
+    q = jnp.asarray(RNG.randn(1, 128, 4, 32), jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 128, 2, 32), jnp.float32)
+    v = jnp.asarray(RNG.randn(1, 128, 2, 32), jnp.float32)
+    outs = [ops.flash_attention(q, k, v, block_q=bq, block_kv=bk,
+                                interpret=True)
+            for bq, bk in ((32, 32), (64, 128), (128, 64))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize("b,S,H,P,N,chunk", [
+    (2, 64, 3, 16, 8, 16),
+    (1, 128, 2, 32, 16, 32),
+    (1, 64, 1, 8, 8, 64),     # single chunk
+    (3, 32, 4, 16, 4, 8),
+])
+def test_ssd_scan_matches_sequential_oracle(b, S, H, P, N, chunk):
+    x = jnp.asarray(RNG.randn(b, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.rand(b, S, H) * 0.5 + 0.01, jnp.float32)
+    A = -jnp.asarray(RNG.rand(H) * 4 + 0.5, jnp.float32)
+    B = jnp.asarray(RNG.randn(b, S, N), jnp.float32)
+    C = jnp.asarray(RNG.randn(b, S, N), jnp.float32)
+    y, s = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y_ref, s_ref = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(y, y_ref, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(s, s_ref, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_scan_matches_model_path():
+    """The jnp chunked implementation used by the model (models/ssm.py)
+    and the Pallas kernel agree."""
+    from repro.models.ssm import ssd_chunked
+    b, S, H, P, N = 2, 64, 2, 16, 8
+    x = jnp.asarray(RNG.randn(b, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.rand(b, S, H) * 0.5 + 0.01, jnp.float32)
+    A = -jnp.asarray(RNG.rand(H) + 0.5, jnp.float32)
+    B = jnp.asarray(RNG.randn(b, S, N), jnp.float32)
+    C = jnp.asarray(RNG.randn(b, S, N), jnp.float32)
+    y_k, s_k = ops.ssd_scan(x, dt, A, B, C, chunk=16, interpret=True)
+    y_m, s_m = ssd_chunked(x, dt, A, B, C, 16)
+    np.testing.assert_allclose(y_k, y_m, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(s_k, s_m, atol=2e-4, rtol=2e-4)
+
+
+# ------------------------------------------------------------ dht probe
+def _routed_oracle(tk, tv, keys, vals, nb, TB, KB):
+    """Sequential per-block oracle in routed arrival order."""
+    keys_r, vals_r, idx = ops.route_keys(keys, vals, nb, TB, KB)
+    etk, etv = np.array(tk), np.array(tv)
+    exp_status = np.full(keys_r.shape, 3, np.int32)
+    for b in range(nb):
+        kk = keys_r[b][np.asarray(keys_r[b]) != -1]
+        vv = vals_r[b][np.asarray(keys_r[b]) != -1]
+        if len(kk) == 0:
+            continue
+        rk, rv, stn = ref.dht_insert_ref(jnp.asarray(etk[b]),
+                                         jnp.asarray(etv[b]),
+                                         jnp.asarray(kk), jnp.asarray(vv))
+        etk[b], etv[b] = np.array(rk), np.array(rv)
+        exp_status[b, : len(kk)] = np.array(stn)
+    flat = np.where(np.asarray(idx) >= 0,
+                    exp_status.reshape(-1)[np.maximum(np.asarray(idx), 0)],
+                    2)
+    return etk, etv, flat
+
+
+@settings(max_examples=8, deadline=None)
+@given(nb=st.sampled_from([2, 4]), TB=st.sampled_from([32, 64]),
+       n=st.sampled_from([4, 24, 64, 120]), seed=st.integers(0, 100))
+def test_dht_insert_matches_cas_oracle(nb, TB, n, seed):
+    rng = np.random.RandomState(seed)
+    keys = jnp.asarray(rng.permutation(50_000)[:n] + 1, jnp.int32)
+    vals = jnp.arange(n, dtype=jnp.int32) + 5
+    tk = jnp.full((nb, TB), -1, jnp.int32)
+    tv = jnp.full((nb, TB), -1, jnp.int32)
+    tk2, tv2, status = ops.dht_insert(tk, tv, keys, vals, interpret=True)
+    KB = min(max(n, 8), 512)
+    etk, etv, est = _routed_oracle(tk, tv, keys, vals, nb, TB, KB)
+    np.testing.assert_array_equal(np.asarray(tk2), etk)
+    np.testing.assert_array_equal(np.asarray(tv2), etv)
+    np.testing.assert_array_equal(np.asarray(status), est)
+
+
+def test_dht_update_existing_key():
+    tk = jnp.full((2, 16), -1, jnp.int32)
+    tv = jnp.full((2, 16), -1, jnp.int32)
+    # distinct (block, slot) triples: block=(k//16)%2, slot=k%16
+    k1 = jnp.asarray([3, 20, 37], jnp.int32)
+    tk, tv, s1 = ops.dht_insert(tk, tv, k1,
+                                jnp.asarray([10, 11, 12], jnp.int32),
+                                interpret=True)
+    assert list(np.asarray(s1)) == [0, 0, 0]
+    tk, tv, s2 = ops.dht_insert(tk, tv, k1,
+                                jnp.asarray([20, 21, 22], jnp.int32),
+                                interpret=True)
+    assert list(np.asarray(s2)) == [1, 1, 1]          # updates
+    vals, hit = ops.dht_lookup(tk, tv, k1, interpret=True)
+    assert list(np.asarray(vals)) == [20, 21, 22]
+    assert bool(jnp.all(hit))

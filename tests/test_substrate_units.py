@@ -1,0 +1,93 @@
+"""Fast unit tests for the simulator substrate and kernel routing."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel
+from repro.core.topology import (build_machine, counter_of_proc,
+                                 counter_ranks, proc_distance_matrix)
+from repro.core.window import build_layout
+
+
+def test_machine_hierarchy_shapes():
+    m = build_machine(24, (2, 3))          # machine > 2 racks > 6 nodes
+    assert m.N == 3
+    assert list(m.n_elems) == [1, 2, 6]
+    # 4 procs per node, nodes 0-2 in rack 0.
+    assert m.proc_elem[2][0] == 0 and m.proc_elem[2][23] == 5
+    assert m.proc_elem[1][0] == 0 and m.proc_elem[1][23] == 1
+
+
+def test_distance_matrix_properties():
+    m = build_machine(16, (2, 2))
+    d = proc_distance_matrix(m)
+    assert np.all(np.diag(d) == 0)
+    np.testing.assert_array_equal(d, d.T)
+    # same node = 1; same rack different node = 2; cross rack = 3.
+    assert d[0, 1] == 1
+    assert d[0, 4] == 2
+    assert d[0, 12] == 3
+
+
+def test_cost_tables_monotone_in_distance():
+    m = build_machine(16, (2, 2))
+    d = proc_distance_matrix(m)
+    plain, atomic = CostModel().tables(d)
+    assert plain[0, 0] < plain[0, 1] < plain[0, 4] < plain[0, 12]
+    assert np.all(atomic >= plain)
+
+
+def test_counter_placement():
+    m = build_machine(32, (4,))            # 8 procs/node
+    ranks = counter_ranks(m, 8)
+    assert list(ranks) == [0, 8, 16, 24]   # one per node
+    c = counter_of_proc(m, 8)
+    assert c[0] == 0 and c[7] == 0 and c[8] == 1 and c[31] == 3
+
+
+def test_window_layout_ownership():
+    m = build_machine(8, (2,))
+    lay = build_layout(m, T_DC=4)
+    # Every word's owner is a valid rank; counters live on ranks 0, 4.
+    assert lay.owner.min() >= 0 and lay.owner.max() < 8
+    np.testing.assert_array_equal(lay.ctr_rank, [0, 4])
+    # Leaf queue words are hosted by their own process.
+    np.testing.assert_array_equal(lay.owner[lay.next_w[-1]],
+                                  np.arange(8))
+    # TAIL of the root queue lives on the root element's host (rank 0).
+    assert lay.owner[lay.tail_w[0][0]] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 200), nb=st.sampled_from([2, 4, 8]),
+       TB=st.sampled_from([16, 64]), seed=st.integers(0, 99))
+def test_route_keys_is_a_partition(n, nb, TB, seed):
+    """Routing sends every key to exactly one routed slot (or overflow),
+    and the slot's block matches the key's hash block."""
+    from repro.kernels.ops import route_keys
+    rng = np.random.RandomState(seed)
+    keys = jnp.asarray(rng.permutation(100_000)[:n] + 1, jnp.int32)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    KB = min(max(n, 8), 512)
+    keys_r, vals_r, idx = route_keys(keys, vals, nb, TB, KB)
+    idx = np.asarray(idx)
+    routed = idx[idx >= 0]
+    assert len(np.unique(routed)) == len(routed)      # injective
+    flat_k = np.asarray(keys_r).reshape(-1)
+    for i, k in zip(idx, np.asarray(keys)):
+        if i >= 0:
+            assert flat_k[i] == k
+            assert (i // KB) == (int(k) // TB) % nb    # right block
+    # Non-routed keys only when their bucket exceeded KB.
+    assert ((idx < 0).sum() == 0) or n > KB
+
+
+def test_versioned_store_many_swaps():
+    from repro.serve import VersionedStore
+    store = VersionedStore({"v": 0}, n_workers=4, T_DC=2)
+    for i in range(5):
+        v = store.swap({"v": i + 1})
+        assert v == i + 1
+    with store.reader_view(2) as (params, ver):
+        assert params["v"] == 5 and ver == 5
