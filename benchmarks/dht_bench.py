@@ -15,9 +15,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, engine
+from repro.core import LockSpec, engine, writer_mask
 from repro.core.programs.dht import FompiADHT
-from benchmarks.locks import PROCS_PER_NODE, make_lock
+from benchmarks.locks import make_session
 
 N_TABLE_WORDS = 64
 
@@ -37,28 +37,28 @@ def _normalized_us(m, P, target_acq):
 
 
 def _run_fompi_a(P, fw, target_acq, seed=0):
-    lock = api.FompiSpinLock(P=P)            # reuse machine/window plumbing
-    # table words live in the extra scratch area (owned round-robin);
-    # rebuild layout with enough scratch for table + heap pointer.
-    from repro.core.window import build_layout
-    lock.layout = build_layout(lock.machine, 1,
-                               extra_words=N_TABLE_WORDS + 1)
-    W = lock.layout.W
+    # Reuse the lock-free spec's machine/window plumbing; table words
+    # live in the extra scratch area (owned round-robin), so rebuild the
+    # layout with enough scratch for table + heap pointer.
+    spec = LockSpec(kind="fompi_spin", P=P)
+    machine = spec.machine()
+    layout = spec.layout(machine, extra_words=N_TABLE_WORDS + 1)
+    W = layout.W
     table_words = np.arange(W - N_TABLE_WORDS - 1, W - 1, dtype=np.int32)
     heap_word = W - 1
-    writer_mask = api.writer_mask(P, fw)
-    prog = FompiADHT(table_words, heap_word, writer_mask)
-    env = engine.make_env(lock.machine, lock.layout,
-                          is_writer=writer_mask, target_acq=target_acq)
-    m = engine.run_sim(prog, env, lock.layout, seed=seed,
+    mask = writer_mask(P, fw)
+    prog = FompiADHT(table_words, heap_word, mask)
+    env = engine.make_env(machine, layout, is_writer=mask,
+                          target_acq=target_acq)
+    m = engine.run_sim(prog, env, layout, seed=seed,
                        max_events=MAX_EVENTS)
     return _normalized_us(m, P, target_acq)
 
 
 def _run_locked(kind, P, fw, target_acq, seed=0):
-    lock = make_lock(kind, P, writer_fraction=fw)
-    m = lock.run(target_acq=target_acq, cs_kind=1, seed=seed,
-                 max_events=MAX_EVENTS)
+    sess = make_session(kind, P, bench="sob", target_acq=target_acq,
+                        writer_fraction=fw, max_events=MAX_EVENTS)
+    m = sess.run(seed)
     assert int(m.violations) == 0
     return _normalized_us(m, P, target_acq)
 

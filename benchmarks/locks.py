@@ -7,6 +7,12 @@
   WARB  1-4us wait after release             (Fig. 3)
   RW    RMA-RW vs foMPI-RW across F_W        (Fig. 5)
 
+Every configuration is a `LockSpec.paper_default` point (Piz Daint
+machine model: 16 processes/node) run through a compiled `Session`, so
+benchmarks, examples, and tests share one construction path. The RW
+figure scans the writer fraction with `Session.sweep` — one jitted
+dispatch per (kind, P) instead of a Python loop.
+
 The simulator charges the calibrated Aries-class cost model
 (core/cost.py); results are *simulated microseconds*. Relative
 orderings are the reproduction target (paper: RMA-MCS ~10x/4x lower
@@ -15,54 +21,30 @@ P>=64).
 """
 from __future__ import annotations
 
-import numpy as np
+from repro.core import LockSpec, PROCS_PER_NODE, Session, metrics_at
 
-from repro.core import api
-
-# Machine model mirrors the paper's Piz Daint runs: 16 processes/node
-# (8-core HT Xeon), nodes under one fabric => fanout (nodes,).
-PROCS_PER_NODE = 16
+BENCH_CS = {"ecsb": 0, "sob": 1, "wcsb": 2, "lb": 0, "warb": 0}
 
 
-def _fanout(P):
-    return (max(P // PROCS_PER_NODE, 1),)
+def make_session(kind, P, *, bench="ecsb", target_acq=4,
+                 writer_fraction=None, T_DC=PROCS_PER_NODE, T_R=1024,
+                 cost=None, max_events=2_000_000) -> Session:
+    spec = LockSpec.paper_default(
+        kind, P, writer_fraction=writer_fraction, T_DC=T_DC, T_R=T_R,
+        **({} if cost is None else {"cost": cost}))
+    return Session(spec, target_acq=target_acq, cs_kind=BENCH_CS[bench],
+                   think=bench == "warb", max_events=max_events)
 
 
-def _tl_for(P, kind):
-    if kind in ("rma_mcs", "rma_rw"):
-        return (1 << 20, 64)       # root unbounded, 64 local passes
-    return None
+def metrics_row(m, *, bench, kind, P) -> dict:
+    """Flatten one Metrics point into a result row.
 
-
-def make_lock(kind, P, *, writer_fraction=0.002, T_DC=PROCS_PER_NODE,
-              T_R=1024, cost=None):
-    kw = dict(P=P)
-    if cost is not None:
-        kw["cost"] = cost
-    if kind in ("rma_mcs", "rma_rw"):
-        kw.update(fanout=_fanout(P), T_L=_tl_for(P, kind))
-    if kind == "rma_rw":
-        kw.update(T_DC=min(T_DC, P), T_R=T_R,
-                  writer_fraction=writer_fraction)
-    if kind == "fompi_rw":
-        kw.update(writer_fraction=writer_fraction)
-    return api.LOCKS[kind](**kw)
-
-
-def run_benchmark(kind, P, *, bench="ecsb", target_acq=4, seed=0,
-                  writer_fraction=0.002, T_DC=PROCS_PER_NODE, T_R=1024,
-                  max_events=2_000_000):
-    cs_kind = {"ecsb": 0, "sob": 1, "wcsb": 2, "lb": 0, "warb": 0}[bench]
-    think = bench == "warb"
-    lock = make_lock(kind, P, writer_fraction=writer_fraction, T_DC=T_DC,
-                     T_R=T_R)
-    m = lock.run(target_acq=target_acq, cs_kind=cs_kind, think=think,
-                 seed=seed, max_events=max_events)
+    Safety always holds; centralized baselines can SATURATE at scale
+    (zero finished acquires in the event budget -- the paper's
+    "does not scale" regime). Throughput/latency are then steady-state
+    estimates over whatever completed.
+    """
     assert int(m.violations) == 0, f"{kind} P={P}: mutual exclusion violated"
-    # Safety always holds; centralized baselines can SATURATE at scale
-    # (zero finished acquires in the event budget -- the paper's
-    # "does not scale" regime). Throughput/latency are then steady-state
-    # estimates over whatever completed.
     done = int(m.total_acquires)
     return {
         "bench": bench, "kind": kind, "P": P,
@@ -73,6 +55,15 @@ def run_benchmark(kind, P, *, bench="ecsb", target_acq=4, seed=0,
         "acquires": done,
         "completed": bool(m.completed),
     }
+
+
+def run_benchmark(kind, P, *, bench="ecsb", target_acq=4, seed=0,
+                  writer_fraction=0.002, T_DC=PROCS_PER_NODE, T_R=1024,
+                  max_events=2_000_000):
+    sess = make_session(kind, P, bench=bench, target_acq=target_acq,
+                        writer_fraction=writer_fraction, T_DC=T_DC,
+                        T_R=T_R, max_events=max_events)
+    return metrics_row(sess.run(seed), bench=bench, kind=kind, P=P)
 
 
 def bench_latency(ps=(16, 64, 256), kinds=("fompi_spin", "d_mcs",
@@ -87,13 +78,17 @@ def bench_throughput(bench, ps=(16, 64, 256),
 
 
 def bench_rw_vs_sota(ps=(16, 64, 256), fws=(0.002, 0.02, 0.05),
-                     kinds=("fompi_rw", "rma_rw")):
-    """Fig. 5: RW locks across writer fractions."""
+                     kinds=("fompi_rw", "rma_rw"), seed=0):
+    """Fig. 5: RW locks across writer fractions (one jitted sweep per
+    (kind, P) pair)."""
     out = []
     for k in kinds:
-        for fw in fws:
-            for P in ps:
-                r = run_benchmark(k, P, bench="ecsb", writer_fraction=fw)
+        for P in ps:
+            sess = make_session(k, P, bench="ecsb")
+            m = sess.sweep("writer_fraction", fws, seeds=(seed,))
+            for i, fw in enumerate(fws):
+                r = metrics_row(metrics_at(m, i, 0), bench="ecsb",
+                                kind=k, P=P)
                 r["F_W"] = fw
                 out.append(r)
     return out

@@ -11,15 +11,14 @@ from __future__ import annotations
 import argparse
 import csv
 import os
-import sys
 
-RESULTS = os.path.join(os.path.dirname(__file__), "../results/bench")
+RESULTS = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "results", "bench"))
 
 
 def write_csv(name, rows):
     if not rows:
         return
-    os.makedirs(RESULTS, exist_ok=True)
     keys = sorted({k for r in rows for k in r})
     with open(os.path.join(RESULTS, name + ".csv"), "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=keys)
@@ -47,6 +46,7 @@ def main(argv=None):
                     help="comma list: lb,ecsb,sob,wcsb,warb,rw,tdc,tl,tr,"
                          "dht,table,kernels,roofline")
     args = ap.parse_args(argv)
+    os.makedirs(RESULTS, exist_ok=True)
 
     from benchmarks import dht_bench, kernels_bench, locks, roofline, thresholds
 
@@ -114,7 +114,7 @@ def main(argv=None):
         else:
             print("\n(no dry-run artifacts; run python -m "
                   "repro.launch.dryrun first)")
-    print("\nbenchmarks complete; csv in results/bench/")
+    print(f"\nbenchmarks complete; csv in {RESULTS}")
 
 
 if __name__ == "__main__":

@@ -3,68 +3,79 @@
   sweep_tdc  (4a): physical-counter spacing T_DC
   sweep_tl   (4b-d): locality thresholds T_L,i (product + split)
   sweep_tr   (4e-f): reader batch T_R, crossed with F_W
+
+Each figure is a `Session.sweep` call: T_L and T_R scans run as ONE
+jitted dispatch over (points x seeds); T_DC changes the window layout
+(counter placement), so it compiles per point while still batching
+seeds.
 """
 from __future__ import annotations
 
-from benchmarks.locks import PROCS_PER_NODE, run_benchmark
+from benchmarks.locks import PROCS_PER_NODE, make_session, metrics_row
+from repro.core import LockSpec, Session, metrics_at
 
 
 def sweep_tdc(ps=(32, 64, 256), tdcs=(4, 16, 32, 64), fw=0.002):
     out = []
-    for t in tdcs:
-        for P in ps:
-            if t > P:
-                continue
-            r = run_benchmark("rma_rw", P, bench="ecsb",
-                              writer_fraction=fw, T_DC=t)
+    for P in ps:
+        values = [t for t in tdcs if t <= P]
+        if not values:
+            continue
+        sess = make_session("rma_rw", P, writer_fraction=fw)
+        m = sess.sweep("T_DC", values)
+        for i, t in enumerate(values):
+            r = metrics_row(metrics_at(m, i, 0), bench="ecsb",
+                            kind="rma_rw", P=P)
             r["T_DC"] = t
             out.append(r)
     return out
 
 
+def _tl_session(P, fw):
+    spec = LockSpec(kind="rma_rw", P=P,
+                    fanout=(max(P // PROCS_PER_NODE, 1),),
+                    T_DC=PROCS_PER_NODE, T_L=(1 << 20, 64), T_R=1024,
+                    writer_fraction=fw)
+    return Session(spec, target_acq=4, cs_kind=0)
+
+
+def _tl_rows(bench, P, sess, points):
+    m = sess.sweep("T_L", points)
+    out = []
+    for i, (root, leaf) in enumerate(points):
+        mi = metrics_at(m, i, 0)
+        assert int(mi.violations) == 0 and bool(mi.completed)
+        out.append({"bench": bench, "P": P, "T_W": root * leaf,
+                    "T_L": (root, leaf),
+                    "throughput_per_s": float(mi.throughput),
+                    "latency_us": float(mi.mean_latency),
+                    "locality": float(mi.locality)})
+    return out
+
+
 def sweep_tl_product(P=64, products=(16, 100, 1000), fw=0.25):
     """Fig 4b: total writer batch T_W = prod(T_L) before reader handover."""
-    from repro.core import api
-    out = []
+    points = []
     for prod in products:
         leaf = max(int(prod ** 0.5), 1)
         root = max(prod // leaf, 1)
-        lock = api.RMARWLock(P=P, fanout=(max(P // PROCS_PER_NODE, 1),),
-                             T_DC=PROCS_PER_NODE, T_L=(root, leaf),
-                             T_R=1024, writer_fraction=fw)
-        m = lock.run(target_acq=4, cs_kind=0, seed=0)
-        assert int(m.violations) == 0 and bool(m.completed)
-        out.append({"bench": "tl_product", "P": P, "T_W": root * leaf,
-                    "T_L": (root, leaf),
-                    "throughput_per_s": float(m.throughput),
-                    "latency_us": float(m.mean_latency),
-                    "locality": float(m.locality)})
-    return out
+        points.append((root, leaf))
+    return _tl_rows("tl_product", P, _tl_session(P, fw), points)
 
 
 def sweep_tl_split(P=64, splits=((100, 10), (40, 25), (20, 50)), fw=0.25):
     """Fig 4c/d: fixed product, varying the per-level split (root, leaf)."""
-    from repro.core import api
-    out = []
-    for root, leaf in splits:
-        lock = api.RMARWLock(P=P, fanout=(max(P // PROCS_PER_NODE, 1),),
-                             T_DC=PROCS_PER_NODE, T_L=(root, leaf),
-                             T_R=1024, writer_fraction=fw)
-        m = lock.run(target_acq=4, cs_kind=0, seed=0)
-        assert int(m.violations) == 0 and bool(m.completed)
-        out.append({"bench": "tl_split", "P": P, "T_L": (root, leaf),
-                    "throughput_per_s": float(m.throughput),
-                    "latency_us": float(m.mean_latency),
-                    "locality": float(m.locality)})
-    return out
+    return _tl_rows("tl_split", P, _tl_session(P, fw), list(splits))
 
 
 def sweep_tr(P=64, trs=(64, 512, 4096), fws=(0.002, 0.02, 0.05)):
     out = []
     for fw in fws:
-        for tr in trs:
-            r = run_benchmark("rma_rw", P, bench="ecsb",
-                              writer_fraction=fw, T_R=tr)
+        sess = make_session("rma_rw", P, writer_fraction=fw)
+        m = sess.sweep("T_R", trs)
+        for i, tr in enumerate(trs):
+            r = metrics_row(metrics_at(m, i, 0), bench="ecsb",
+                            kind="rma_rw", P=P)
             r["T_R"] = tr
             r["F_W"] = fw
             out.append(r)

@@ -1,9 +1,10 @@
 """Lock family tour: every protocol of the paper on one workload, plus
-the locality/fairness dial (T_L) and the reader/writer dial (T_R).
+the locality/fairness dial (T_L) and the reader/writer dial (T_R) --
+each dial turned with one jit-batched `Session.sweep` call.
 
     PYTHONPATH=src python examples/lock_demo.py
 """
-from repro.core import api
+from repro.core import LockSpec, Session, metrics_at, registered_kinds
 
 P = 64
 print(f"== all five protocols, P={P}, single-op CS ==")
@@ -15,23 +16,31 @@ for kind in ("fompi_spin", "fompi_rw", "d_mcs", "rma_mcs", "rma_rw"):
         kw["writer_fraction"] = 0.05
     if kind == "rma_rw":
         kw.update(T_DC=16, T_R=1024)
-    lock = api.LOCKS[kind](P=P, **kw)
-    m = lock.run(target_acq=6, cs_kind=1, seed=0)
+    sess = Session(LockSpec(kind=kind, P=P, **kw), target_acq=6, cs_kind=1)
+    m = sess.run(seed=0)
     print(f"  {kind:11s} latency={float(m.mean_latency):9.2f}us "
           f"throughput={float(m.throughput):10.3g}/s "
           f"locality={float(m.locality):.2f} "
           f"(violations={int(m.violations)})")
+assert set(registered_kinds()) == {"fompi_spin", "fompi_rw", "d_mcs",
+                                   "rma_mcs", "rma_rw"}
 
 print("\n== T_L: locality vs fairness (RMA-MCS, Fig. 4c) ==")
-for t_leaf in (1, 4, 16, 64):
-    lock = api.RMAMCSLock(P=P, fanout=(4,), T_L=(1 << 20, t_leaf))
-    m = lock.run(target_acq=6, seed=0)
-    print(f"  T_L,leaf={t_leaf:3d}: locality={float(m.locality):.2f} "
-          f"throughput={float(m.throughput):10.3g}/s")
+mcs = Session(LockSpec(kind="rma_mcs", P=P, fanout=(4,),
+                       T_L=(1 << 20, 1)), target_acq=6)
+leaves = (1, 4, 16, 64)
+m = mcs.sweep("T_L", [(1 << 20, t) for t in leaves])
+for i, t_leaf in enumerate(leaves):
+    mi = metrics_at(m, i, 0)
+    print(f"  T_L,leaf={t_leaf:3d}: locality={float(mi.locality):.2f} "
+          f"throughput={float(mi.throughput):10.3g}/s")
 
 print("\n== T_R: reader batch before writer handover (Fig. 4e) ==")
-for t_r in (16, 256, 4096):
-    lock = api.RMARWLock(P=P, fanout=(4,), T_DC=16, T_L=(4, 4), T_R=t_r,
-                         writer_fraction=0.05)
-    m = lock.run(target_acq=6, seed=0)
-    print(f"  T_R={t_r:5d}: throughput={float(m.throughput):10.3g}/s")
+rw = Session(LockSpec(kind="rma_rw", P=P, fanout=(4,), T_DC=16,
+                      T_L=(4, 4), T_R=16, writer_fraction=0.05),
+             target_acq=6)
+trs = (16, 256, 4096)
+m = rw.sweep("T_R", trs)
+for i, t_r in enumerate(trs):
+    mi = metrics_at(m, i, 0)
+    print(f"  T_R={t_r:5d}: throughput={float(mi.throughput):10.3g}/s")

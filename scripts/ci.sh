@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# CI gate: install dev deps, run tier-1 tests, smoke one benchmark.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -r requirements-dev.txt
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q
+python -m benchmarks.run --quick --only lb

@@ -1,3 +1,25 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Distributed RMA lock core: declarative specs + compiled sessions.
+
+The paper's primary contribution — a family of topology-aware RMA locks
+tuned by the (T_DC, T_L, T_R) parameter point — is exposed through two
+layers:
+
+  * `LockSpec` (repro.core.spec): frozen, validated, JSON-round-
+    trippable description of one lock configuration.
+  * `Session` (repro.core.session): compiles a spec once and runs it
+    under one seed, a batch of seeds (single dispatch), or a jit-
+    batched parameter sweep.
+
+`repro.core.api` keeps the deprecated per-kind classes as shims.
+"""
+from repro.core.engine import Metrics
+from repro.core.session import DYNAMIC_AXES, SWEEP_AXES, Session, metrics_at
+from repro.core.spec import (EXTRA_WORDS, PROCS_PER_NODE, LockKind,
+                             LockSpec, get_kind, register_kind,
+                             registered_kinds, writer_mask)
+
+__all__ = [
+    "DYNAMIC_AXES", "EXTRA_WORDS", "LockKind", "LockSpec", "Metrics",
+    "PROCS_PER_NODE", "SWEEP_AXES", "Session", "get_kind", "metrics_at",
+    "register_kind", "registered_kinds", "writer_mask",
+]

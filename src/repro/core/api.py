@@ -1,38 +1,34 @@
-"""Public API for the distributed RMA locks.
+"""Deprecated per-kind lock classes — compatibility shims.
 
-Typical use:
+New code should use the declarative spec/session API instead:
 
-    from repro.core import api
-    lock = api.RMARWLock(P=64, fanout=(8,), T_DC=8, T_L=(4, 4), T_R=64,
-                         writer_fraction=0.2)
-    m = lock.run(target_acq=16, seed=0)
-    assert m.violations == 0 and m.completed
+    from repro.core import LockSpec, Session
+    spec = LockSpec(kind="rma_rw", P=64, fanout=(4,), T_DC=16,
+                    T_L=(1 << 20, 8), T_R=1024, writer_fraction=0.02)
+    sess = Session(spec, target_acq=16)
+    m = sess.run(seed=0)                      # one schedule
+    ms = sess.run_batch(range(64))            # 64 schedules, one dispatch
+    assert int(ms.violations.sum()) == 0
 
 Lock kinds map to the paper: `rma_rw` (§3), `rma_mcs` (§3.5), `d_mcs`
-(§2.4), `fompi_spin` / `fompi_rw` (§5 baselines).
+(§2.4), `fompi_spin` / `fompi_rw` (§5 baselines) — see
+`repro.core.spec` for the registry.
+
+The classes below mirror the original seed API (`RMARWLock(P=...,
+...).run(...)`). They are thin wrappers that build a `LockSpec` and
+cache one `Session` per workload; they will be removed once nothing
+imports them.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
-
-import numpy as np
 
 from repro.core import engine
 from repro.core.cost import CostModel, DEFAULT_COST
-from repro.core.programs import fompi, hier
-from repro.core.topology import Machine, build_machine
-from repro.core.window import Layout, build_layout
-
-
-def writer_mask(P: int, writer_fraction: float, seed: int = 17) -> np.ndarray:
-    """Random reader/writer roles (paper §4.4: 'defined randomly')."""
-    n_writers = max(1, int(round(P * writer_fraction))) if writer_fraction > 0 else 0
-    rng = np.random.RandomState(seed)
-    mask = np.zeros(P, bool)
-    if n_writers:
-        mask[rng.choice(P, size=n_writers, replace=False)] = True
-    return mask
+from repro.core.session import Session
+from repro.core.spec import LockSpec, registered_kinds, writer_mask  # noqa: F401 (re-export)
 
 
 @dataclasses.dataclass
@@ -46,97 +42,106 @@ class BaseLock:
     cost: CostModel = DEFAULT_COST
     role_seed: int = 17
 
+    kind = None                   # overridden per subclass
+
     def __post_init__(self):
-        self.machine: Machine = build_machine(self.P, tuple(self.fanout))
-        self.layout: Layout = build_layout(self.machine, self.T_DC,
-                                           extra_words=4)
-        self.is_writer = self._roles()
-        self.program = self._program()
+        warnings.warn(
+            f"{type(self).__name__} is deprecated; use "
+            f"LockSpec(kind={self.kind!r}, ...) with repro.core.Session",
+            DeprecationWarning, stacklevel=3)
+        self.spec = LockSpec(
+            kind=self.kind, P=self.P, fanout=tuple(self.fanout),
+            T_DC=self.T_DC,
+            T_L=None if self.T_L is None else tuple(self.T_L),
+            T_R=self.T_R, writer_fraction=self.writer_fraction,
+            role_seed=self.role_seed, cost=self.cost)
+        self._sessions = {}
+        self._built = None
 
-    # --- overridden by subclasses ---
-    def _roles(self) -> np.ndarray:
-        return np.ones(self.P, bool)
+    # Legacy attribute surface, built lazily so locks that only ever
+    # call run() don't duplicate the Session's machine/layout work.
+    def _build_legacy(self):
+        if self._built is None:
+            machine = self.spec.machine()
+            layout = self.spec.layout(machine)
+            self._built = (machine, layout, self.spec.roles(),
+                           self.spec.program(layout))
+        return self._built
 
-    def _program(self):
-        raise NotImplementedError
+    @property
+    def machine(self):
+        return self._build_legacy()[0]
+
+    @property
+    def layout(self):
+        return self._build_legacy()[1]
+
+    @property
+    def is_writer(self):
+        return self._build_legacy()[2]
+
+    @property
+    def program(self):
+        return self._build_legacy()[3]
+
+    def _session(self, *, target_acq=8, cs_kind=0, think=False,
+                 max_events=2_000_000) -> Session:
+        key = (target_acq, cs_kind, think, max_events)
+        if key not in self._sessions:
+            self._sessions[key] = Session(
+                self.spec, target_acq=target_acq, cs_kind=cs_kind,
+                think=think, max_events=max_events)
+        return self._sessions[key]
 
     def make_env(self, *, target_acq=8, cs_kind=0, think=False) -> engine.Env:
-        return engine.make_env(
-            self.machine, self.layout, T_L=self.T_L, T_R=self.T_R,
-            is_writer=self.is_writer, target_acq=target_acq,
-            cs_kind=cs_kind, think=think, cost=self.cost)
+        return self._session(target_acq=target_acq, cs_kind=cs_kind,
+                             think=think).env
 
     def run(self, *, target_acq=8, cs_kind=0, think=False, seed=0,
             max_events=2_000_000, env: engine.Env | None = None
             ) -> engine.Metrics:
-        env = env or self.make_env(target_acq=target_acq, cs_kind=cs_kind,
-                                   think=think)
-        return engine.run_sim(self.program, env, self.layout, seed=seed,
-                              max_events=max_events)
+        if env is not None:       # legacy escape hatch: custom env
+            return engine.run_sim(self.program, env, self.layout,
+                                  seed=seed, max_events=max_events)
+        return self._session(target_acq=target_acq, cs_kind=cs_kind,
+                             think=think, max_events=max_events).run(seed)
 
 
 @dataclasses.dataclass
 class RMARWLock(BaseLock):
-    """The paper's topology-aware distributed Reader-Writer lock (§3)."""
+    """Deprecated: LockSpec(kind="rma_rw", ...) — paper §3."""
 
     writer_fraction: float = 0.002
-
-    def _roles(self):
-        return writer_mask(self.P, self.writer_fraction, self.role_seed)
-
-    def _program(self):
-        return hier.rma_rw()
+    kind = "rma_rw"
 
 
 @dataclasses.dataclass
 class RMAMCSLock(BaseLock):
-    """Topology-aware distributed MCS lock (§3.5). Writers only."""
+    """Deprecated: LockSpec(kind="rma_mcs", ...) — paper §3.5."""
 
-    def _program(self):
-        return hier.rma_mcs()
+    kind = "rma_mcs"
 
 
 @dataclasses.dataclass
 class DMCSLock(BaseLock):
-    """Topology-oblivious distributed MCS lock (§2.4): one root queue."""
+    """Deprecated: LockSpec(kind="d_mcs", ...) — paper §2.4."""
 
-    def __post_init__(self):
-        self.fanout = ()          # N = 1: a single machine-wide queue
-        super().__post_init__()
-
-    def _program(self):
-        return hier.d_mcs()
+    kind = "d_mcs"
 
 
 @dataclasses.dataclass
 class FompiSpinLock(BaseLock):
-    """foMPI's simple CAS spin lock (§5 comparison target)."""
+    """Deprecated: LockSpec(kind="fompi_spin", ...) — paper §5."""
 
-    def __post_init__(self):
-        self.fanout = ()
-        super().__post_init__()
-
-    def _program(self):
-        # extra scratch words live at the end of the window.
-        return fompi.FompiSpin(lock_word=self.layout.W - 4)
+    kind = "fompi_spin"
 
 
 @dataclasses.dataclass
 class FompiRWLock(BaseLock):
-    """foMPI-style centralized reader-writer lock (§5 comparison target)."""
+    """Deprecated: LockSpec(kind="fompi_rw", ...) — paper §5."""
 
     writer_fraction: float = 0.002
-
-    def __post_init__(self):
-        self.fanout = ()
-        super().__post_init__()
-
-    def _roles(self):
-        return writer_mask(self.P, self.writer_fraction, self.role_seed)
-
-    def _program(self):
-        return fompi.FompiRW(rcnt_word=self.layout.W - 4,
-                             wflag_word=self.layout.W - 3)
+    kind = "fompi_rw"
 
 
 LOCKS = {
@@ -146,3 +151,4 @@ LOCKS = {
     "fompi_spin": FompiSpinLock,
     "fompi_rw": FompiRWLock,
 }
+assert set(LOCKS) == set(registered_kinds())

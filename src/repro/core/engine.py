@@ -217,6 +217,25 @@ class Metrics(NamedTuple):
     per_proc_acq: jnp.ndarray    # [P]
 
 
+def derive_tw(T_L) -> int:
+    """Total writer batch T_W = prod(T_L), clamped to the unbounded
+    sentinel. Single source of truth for make_env and swept T_L points."""
+    T_L = np.asarray(T_L, np.int32)
+    return int(np.minimum(np.prod(T_L.astype(np.int64)), 1 << 26))
+
+
+def memoized_build(cache: dict, env: Env, builder):
+    """Per-env handler memoization shared by the program classes.
+
+    Keyed by id but holding the env ref: the entry pins the object
+    alive, so a freed-and-reused id can never alias a stale entry.
+    """
+    cached = cache.get(id(env))
+    if cached is None or cached[0] is not env:
+        cache[id(env)] = (env, builder(env))
+    return cache[id(env)][1]
+
+
 def make_env(m: Machine, layout: Layout, *, T_L=None, T_R=1 << 26,
              is_writer=None, target_acq=8, cs_kind=0, think=False,
              cost: CostModel = DEFAULT_COST) -> Env:
@@ -225,7 +244,7 @@ def make_env(m: Machine, layout: Layout, *, T_L=None, T_R=1 << 26,
     if T_L is None:
         T_L = np.full(m.N, 1 << 26, np.int32)
     T_L = np.asarray(T_L, np.int32)
-    T_W = int(np.minimum(np.prod(T_L.astype(np.int64)), 1 << 26))
+    T_W = derive_tw(T_L)
     if is_writer is None:
         is_writer = np.ones(m.P, bool)
     same_leaf = dist <= 1
@@ -272,8 +291,13 @@ def init_state(env: Env, layout: Layout, init_pc: np.ndarray,
         local_passes=jnp.int32(0), total_passes=jnp.int32(0))
 
 
-@functools.partial(jax.jit, static_argnames=("handlers", "max_events"))
-def _run(handlers, max_events: int, st: SimState, seed) -> SimState:
+def step_loop(handlers, max_events: int, st: SimState, seed) -> SimState:
+    """Traceable simulation core: run `st` to completion under `handlers`.
+
+    Plain function (no jit) so callers can embed it under their own
+    jit/vmap — `run_sim_batch` vmaps it over seeds, `Session.sweep`
+    additionally vmaps it over environment points.
+    """
     key0 = jax.random.PRNGKey(seed)
 
     def cond(carry):
@@ -293,13 +317,13 @@ def _run(handlers, max_events: int, st: SimState, seed) -> SimState:
     return st
 
 
-def run_sim(program, env: Env, layout: Layout, *, seed=0,
-            max_events: int = 2_000_000) -> Metrics:
-    """Run a protocol program to completion and summarize metrics."""
-    handlers = program.build(env)
-    st = init_state(env, layout, program.init_pc(env), program.n_regs,
-                    program.init_regs(env))
-    st = _run(handlers, max_events, st, seed)
+@functools.partial(jax.jit, static_argnames=("handlers", "max_events"))
+def _run(handlers, max_events: int, st: SimState, seed) -> SimState:
+    return step_loop(handlers, max_events, st, seed)
+
+
+def summarize(st: SimState) -> Metrics:
+    """Reduce a final SimState to Metrics (traceable; vmap for batches)."""
     total = jnp.sum(st.acq_count)
     mk = jnp.maximum(st.clock, 1e-6)
     return Metrics(
@@ -312,3 +336,34 @@ def run_sim(program, env: Env, layout: Layout, *, seed=0,
         events=st.events,
         locality=st.local_passes / jnp.maximum(st.total_passes, 1),
         per_proc_acq=st.acq_count)
+
+
+@functools.partial(jax.jit, static_argnames=("handlers", "max_events"))
+def _run_batch(handlers, max_events: int, st: SimState,
+               seeds: jnp.ndarray) -> Metrics:
+    final = jax.vmap(lambda s: step_loop(handlers, max_events, st, s))(seeds)
+    return jax.vmap(summarize)(final)
+
+
+def run_sim(program, env: Env, layout: Layout, *, seed=0,
+            max_events: int = 2_000_000) -> Metrics:
+    """Run a protocol program to completion and summarize metrics."""
+    handlers = program.build(env)
+    st = init_state(env, layout, program.init_pc(env), program.n_regs,
+                    program.init_regs(env))
+    return summarize(_run(handlers, max_events, st, seed))
+
+
+def run_sim_batch(program, env: Env, layout: Layout, *, seeds,
+                  max_events: int = 2_000_000) -> Metrics:
+    """Run one configuration under many seeds in a single jitted dispatch.
+
+    vmap over seeds yields one distinct schedule interleaving per seed
+    (the module docstring's SPIN-checking analogue). Returns Metrics
+    whose leaves carry a leading [len(seeds)] axis.
+    """
+    handlers = program.build(env)
+    st = init_state(env, layout, program.init_pc(env), program.n_regs,
+                    program.init_regs(env))
+    return _run_batch(handlers, max_events, st,
+                      jnp.asarray(seeds, jnp.int32))

@@ -22,7 +22,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import Env, SimState, finish_instr, think_duration
+from repro.core.engine import (Env, SimState, finish_instr,
+                               memoized_build, think_duration)
 
 A_OP, A_OVERFLOW, A_DONE, A_CHAIN = 0, 1, 2, 3
 
@@ -58,9 +59,7 @@ class FompiADHT:
         return np.zeros((env.P, self.n_regs), np.int32)
 
     def build(self, env: Env):
-        if id(env) not in self._cache:
-            self._cache[id(env)] = self._build(env)
-        return self._cache[id(env)]
+        return memoized_build(self._cache, env, self._build)
 
     def _build(self, env: Env):
         table = self.table_words

@@ -17,7 +17,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import Env, SimState, cs_duration, cs_enter, cs_exit, finish_instr, think_duration
+from repro.core.engine import (Env, SimState, cs_duration, cs_enter,
+                               cs_exit, finish_instr, memoized_build,
+                               think_duration)
 
 _NOOP = jnp.int32(-1)
 
@@ -46,9 +48,7 @@ class FompiSpin:
         return np.zeros((env.P, self.n_regs), np.int32)
 
     def build(self, env: Env):
-        if id(env) not in self._cache:
-            self._cache[id(env)] = self._build(env)
-        return self._cache[id(env)]
+        return memoized_build(self._cache, env, self._build)
 
     def _build(self, env: Env):
         LW = self.lock_word
@@ -117,9 +117,7 @@ class FompiRW:
         return np.zeros((env.P, self.n_regs), np.int32)
 
     def build(self, env: Env):
-        if id(env) not in self._cache:
-            self._cache[id(env)] = self._build(env)
-        return self._cache[id(env)]
+        return memoized_build(self._cache, env, self._build)
 
     def _build(self, env: Env):
         RC, WF = self.rcnt, self.wflag

@@ -80,10 +80,7 @@ class HierProgram:
 
     # -- helpers -------------------------------------------------------
     def build(self, env: Env):
-        key = id(env)
-        if key not in self._cache:
-            self._cache[key] = self._build(env)
-        return self._cache[key]
+        return engine.memoized_build(self._cache, env, self._build)
 
     def _build(self, env: Env):
         RW = self.has_readers

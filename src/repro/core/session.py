@@ -1,0 +1,170 @@
+"""Compiled lock sessions: one spec, one compile, many runs.
+
+A `Session` realizes a `LockSpec` under a fixed workload (target
+acquires per process, critical-section kind, think time), compiles the
+jitted simulator once, and then offers three execution shapes:
+
+  * `run(seed)`        — one schedule, scalar Metrics.
+  * `run_batch(seeds)` — vmap over seeds in a SINGLE jitted dispatch,
+    stacked Metrics ([S] leading axis). One seed = one distinct
+    schedule interleaving, so a batch is the executable analogue of the
+    paper's SPIN model checking (§4.4) — and of its throughput error
+    bars.
+  * `sweep(axis, values, seeds=...)` — jit-batched scan over one axis
+    of the paper's parameter space. For `T_L`, `T_R`, and
+    `writer_fraction` the scan is a single dispatch vmapped over
+    (points x seeds): those axes only change *values* in the
+    environment, never array shapes. `T_DC` changes the window layout
+    (counter placement), so it compiles per point but still batches
+    seeds. This turns the paper's Fig. 4 threshold sweeps and Fig. 5
+    writer-fraction scans into one call each.
+
+Seed-level caching: the jitted program is cached per (handlers,
+max_events) by JAX, and handlers are cached per environment by the
+program, so repeated `run`/`run_batch` calls on one Session never
+recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.spec import EXTRA_WORDS, LockSpec
+
+# Axes of `sweep`. Dynamic axes share one compiled program (values are
+# traced); T_DC re-lays out the window, so it recompiles per point.
+DYNAMIC_AXES = ("T_L", "T_R", "writer_fraction")
+SWEEP_AXES = DYNAMIC_AXES + ("T_DC",)
+
+
+def metrics_at(m: engine.Metrics, *index) -> engine.Metrics:
+    """Select one element from stacked Metrics (e.g. `metrics_at(m, k, s)`
+    for sweep output, `metrics_at(m, s)` for run_batch output)."""
+    return engine.Metrics(*(leaf[index] for leaf in m))
+
+
+def _stack_metrics(ms) -> engine.Metrics:
+    return engine.Metrics(*(jnp.stack(leaves)
+                            for leaves in zip(*(tuple(m) for m in ms))))
+
+
+class Session:
+    """A compiled (spec, workload) pair ready to run under many seeds."""
+
+    def __init__(self, spec: LockSpec, *, target_acq: int = 8,
+                 cs_kind: int = 0, think: bool = False,
+                 max_events: int = 2_000_000,
+                 extra_words: int = EXTRA_WORDS):
+        self.spec = spec
+        self.target_acq = int(target_acq)
+        self.cs_kind = int(cs_kind)
+        self.think = bool(think)
+        self.max_events = int(max_events)
+        self.extra_words = int(extra_words)
+        self.machine = spec.machine()
+        self.layout = spec.layout(self.machine, extra_words=extra_words)
+        self.is_writer = spec.roles()
+        self.program = spec.program(self.layout)
+        self.env = engine.make_env(
+            self.machine, self.layout, T_L=spec.T_L, T_R=spec.T_R,
+            is_writer=self.is_writer, target_acq=self.target_acq,
+            cs_kind=self.cs_kind, think=self.think, cost=spec.cost)
+        self.handlers = self.program.build(self.env)
+        self.state0 = engine.init_state(
+            self.env, self.layout, self.program.init_pc(self.env),
+            self.program.n_regs, self.program.init_regs(self.env))
+        self._sweep_fn = None
+
+    # ------------------------------------------------------ execution
+    def run_state(self, seed: int = 0) -> engine.SimState:
+        """One schedule to completion; returns the final simulator state
+        (for invariant checks that need more than Metrics)."""
+        return engine._run(self.handlers, self.max_events, self.state0,
+                           seed)
+
+    def run(self, seed: int = 0) -> engine.Metrics:
+        return engine.summarize(self.run_state(seed))
+
+    def run_batch(self, seeds) -> engine.Metrics:
+        """Execute all seeds in one jitted dispatch; Metrics leaves gain
+        a leading [len(seeds)] axis."""
+        return engine._run_batch(self.handlers, self.max_events,
+                                 self.state0,
+                                 jnp.asarray(seeds, jnp.int32))
+
+    # --------------------------------------------------------- sweeps
+    def specs_along(self, axis: str, values) -> list:
+        """The derived LockSpec for every point of a sweep (validated)."""
+        if axis not in SWEEP_AXES:
+            raise ValueError(f"axis must be one of {SWEEP_AXES}, "
+                             f"got {axis!r}")
+        return [self.spec.replace(**{axis: v}) for v in values]
+
+    def sweep(self, axis: str, values, *, seeds=(0,)) -> engine.Metrics:
+        """Scan one parameter axis under a batch of seeds.
+
+        Returns stacked Metrics with leading axes [len(values),
+        len(seeds)]; index with `metrics_at(m, k, s)`.
+        """
+        specs = self.specs_along(axis, values)
+        seeds = jnp.asarray(seeds, jnp.int32)
+        if axis == "T_DC":
+            # Counter placement changes the window layout (array
+            # shapes): compile per point, batch seeds within each.
+            return _stack_metrics([
+                Session(s, target_acq=self.target_acq,
+                        cs_kind=self.cs_kind, think=self.think,
+                        max_events=self.max_events,
+                        extra_words=self.extra_words).run_batch(seeds)
+                for s in specs])
+        dyn, st0 = self._sweep_points(axis, specs)
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep_fn()
+        return self._sweep_fn(dyn, st0, seeds)
+
+    def _sweep_points(self, axis: str, specs):
+        """Stacked per-point env overrides + initial states (numpy)."""
+        dyns, states = [], []
+        for s in specs:
+            if axis == "T_R":
+                dyn = {"T_R": jnp.int32(s.T_R)}
+            elif axis == "T_L":
+                T_L = np.asarray(s.T_L if s.T_L is not None
+                                 else [1 << 26] * s.n_levels, np.int32)
+                dyn = {"T_L": jnp.asarray(T_L),
+                       "T_W": jnp.int32(engine.derive_tw(T_L))}
+            else:                 # writer_fraction: roles change
+                dyn = {"is_writer": jnp.asarray(s.roles())}
+            env_k = dataclasses.replace(self.env, **{
+                k: v for k, v in dyn.items()})
+            # init_pc depends on roles (readers start in the reader
+            # program), so the initial state is built per point.
+            states.append(engine.init_state(
+                env_k, self.layout, self.program.init_pc(env_k),
+                self.program.n_regs, self.program.init_regs(env_k)))
+            dyns.append(dyn)
+        dyn = {k: jnp.stack([d[k] for d in dyns]) for k in dyns[0]}
+        st0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        return dyn, st0
+
+    def _build_sweep_fn(self):
+        program, env, max_events = self.program, self.env, self.max_events
+
+        @jax.jit
+        def sweep_fn(dyn, st0, seeds):
+            def point(dyn_k, st0_k):
+                env_k = dataclasses.replace(env, **dyn_k)
+                # _build, not build: the memoizing build() would retain
+                # this traced env (and its tracers) past the trace.
+                handlers = program._build(env_k)
+                final = jax.vmap(functools.partial(
+                    engine.step_loop, handlers, max_events, st0_k))(seeds)
+                return jax.vmap(engine.summarize)(final)
+            return jax.vmap(point)(dyn, st0)
+
+        return sweep_fn

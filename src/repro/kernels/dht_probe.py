@@ -28,6 +28,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# JAX renamed TPUCompilerParams -> CompilerParams; support both.
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    CompilerParams = pltpu.TPUCompilerParams
+
 EMPTY = -1
 
 
@@ -110,7 +116,7 @@ def dht_insert(table_keys, table_vals, keys, vals, *, interpret=False):
         out_shape=[jax.ShapeDtypeStruct((nb, TB), jnp.int32),
                    jax.ShapeDtypeStruct((nb, TB), jnp.int32),
                    jax.ShapeDtypeStruct((nb, KB), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(table_keys, table_vals, keys, vals)
@@ -131,7 +137,7 @@ def dht_lookup(table_keys, table_vals, keys, *, interpret=False):
                    pl.BlockSpec((1, KB), lambda b: (b, 0))],
         out_shape=[jax.ShapeDtypeStruct((nb, KB), jnp.int32),
                    jax.ShapeDtypeStruct((nb, KB), jnp.bool_)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(table_keys, table_vals, keys)

@@ -5,22 +5,26 @@ under randomized schedules: the simulator jitters every instruction
 duration from a PRNG seed, so distinct seeds explore distinct
 interleavings — the executable analogue of the paper's SPIN model
 checking (§4.4), with hypothesis driving configuration choice and a
-vmapped seed sweep driving schedule choice.
+batched seed sweep driving schedule choice.
+
+Configurations are declarative `LockSpec` points run through compiled
+`Session`s (the API every benchmark and example shares).
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import api, engine
+from repro.core import LockSpec, Session
 
 MAX_EVENTS = 400_000
 
 
-def run_lock(lock, target_acq=3, seed=0, **kw):
-    m = lock.run(target_acq=target_acq, seed=seed, max_events=MAX_EVENTS, **kw)
-    return m
+def session_for(spec, target_acq=3, **kw):
+    return Session(spec, target_acq=target_acq, max_events=MAX_EVENTS, **kw)
+
+
+def run_spec(spec, target_acq=3, seed=0, **kw):
+    return session_for(spec, target_acq=target_acq, **kw).run(seed)
 
 
 def assert_correct(m, expected_acquires):
@@ -43,53 +47,48 @@ def assert_correct(m, expected_acquires):
 ])
 @pytest.mark.parametrize("seed", [0, 1])
 def test_me_df_sf(kind, kw, seed):
-    lock = api.LOCKS[kind](P=16, **kw)
-    m = run_lock(lock, target_acq=3, seed=seed)
+    m = run_spec(LockSpec(kind=kind, P=16, **kw), target_acq=3, seed=seed)
     assert_correct(m, 16 * 3)
     # Starvation freedom: every process got exactly its share.
     assert np.all(np.asarray(m.per_proc_acq) == 3)
 
 
 def test_three_level_hierarchy():
-    lock = api.RMARWLock(P=24, fanout=(2, 3), T_DC=4, T_L=(2, 2, 3),
-                         T_R=12, writer_fraction=0.3)
-    m = run_lock(lock, target_acq=3, seed=5)
+    spec = LockSpec(kind="rma_rw", P=24, fanout=(2, 3), T_DC=4,
+                    T_L=(2, 2, 3), T_R=12, writer_fraction=0.3)
+    m = run_spec(spec, target_acq=3, seed=5)
     assert_correct(m, 24 * 3)
 
 
 def test_all_reader_and_all_writer_extremes():
-    allr = api.RMARWLock(P=8, fanout=(2,), T_DC=2, T_L=(2, 2), T_R=8,
-                         writer_fraction=0.0)
+    allr = LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=2, T_L=(2, 2),
+                    T_R=8, writer_fraction=0.0)
     # writer_mask guarantees >=1 writer only when fraction > 0.
-    m = run_lock(allr, target_acq=4)
+    m = run_spec(allr, target_acq=4)
     assert_correct(m, 8 * 4)
-    allw = api.RMARWLock(P=8, fanout=(2,), T_DC=2, T_L=(2, 2), T_R=8,
-                         writer_fraction=1.0)
-    m = run_lock(allw, target_acq=4)
+    allw = allr.replace(writer_fraction=1.0)
+    m = run_spec(allw, target_acq=4)
     assert_correct(m, 8 * 4)
 
 
 def test_cs_workloads_and_think_time():
-    lock = api.RMARWLock(P=8, fanout=(2,), T_DC=2, T_L=(2, 2), T_R=8,
-                         writer_fraction=0.25)
+    spec = LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=2, T_L=(2, 2),
+                    T_R=8, writer_fraction=0.25)
     for cs_kind, think in [(1, False), (2, False), (0, True)]:
-        m = run_lock(lock, target_acq=2, cs_kind=cs_kind, think=think)
+        m = run_spec(spec, target_acq=2, cs_kind=cs_kind, think=think)
         assert_correct(m, 8 * 2)
 
 
 # ------------------------------------------------- schedule exploration
-def test_vmapped_seed_sweep_rma_rw():
-    """Many interleavings at once: vmap the whole simulation over seeds."""
-    lock = api.RMARWLock(P=8, fanout=(4,), T_DC=2, T_L=(2, 2), T_R=4,
-                         writer_fraction=0.5)
-    env = lock.make_env(target_acq=2)
-    handlers = lock.program.build(env)
-    st0 = engine.init_state(env, lock.layout, lock.program.init_pc(env),
-                            lock.program.n_regs, lock.program.init_regs(env))
-    seeds = jnp.arange(24)
-    final = jax.vmap(lambda s: engine._run(handlers, 60_000, st0, s))(seeds)
-    assert bool(jnp.all(final.violations == 0))
-    assert bool(jnp.all(jnp.all(final.done, axis=-1)))
+def test_batched_seed_sweep_rma_rw():
+    """Many interleavings at once: one dispatch vmapped over seeds."""
+    spec = LockSpec(kind="rma_rw", P=8, fanout=(4,), T_DC=2, T_L=(2, 2),
+                    T_R=4, writer_fraction=0.5)
+    sess = Session(spec, target_acq=2, max_events=60_000)
+    m = sess.run_batch(np.arange(24))
+    assert m.violations.shape == (24,)
+    assert int(np.asarray(m.violations).sum()) == 0
+    assert bool(np.asarray(m.completed).all())
 
 
 @settings(max_examples=12, deadline=None)
@@ -115,14 +114,11 @@ def test_hypothesis_rma_rw(per_node, nodes, t_leaf, t_root, t_r, t_dc, wf,
     from repro.core.programs import hier
 
     P = per_node * nodes
-    lock = api.RMARWLock(P=P, fanout=(nodes,), T_DC=t_dc,
-                         T_L=(t_root, t_leaf), T_R=t_r, writer_fraction=wf,
-                         role_seed=seed)
-    env = lock.make_env(target_acq=2)
-    handlers = lock.program.build(env)
-    st0 = engine.init_state(env, lock.layout, lock.program.init_pc(env),
-                            lock.program.n_regs, lock.program.init_regs(env))
-    stf = engine._run(handlers, MAX_EVENTS, st0, seed)
+    spec = LockSpec(kind="rma_rw", P=P, fanout=(nodes,), T_DC=t_dc,
+                    T_L=(t_root, t_leaf), T_R=t_r, writer_fraction=wf,
+                    role_seed=seed)
+    sess = session_for(spec, target_acq=2)
+    stf = sess.run_state(seed)
     assert int(stf.violations) == 0, "mutual exclusion violated"
     stuck = ~np.asarray(stf.done)
     if stuck.any():
@@ -130,7 +126,7 @@ def test_hypothesis_rma_rw(per_node, nodes, t_leaf, t_root, t_r, t_dc, wf,
         # parked in the reader retry loop, each with partial progress.
         assert t_r <= t_dc * 2 + 1, \
             f"unexpected starvation at T_R={t_r} > arrivals bound"
-        assert not np.asarray(env.is_writer)[stuck].any()
+        assert not np.asarray(sess.env.is_writer)[stuck].any()
         retry_loop = {hier.R_BARRIER, hier.R_FAO, hier.R_CHECK_TAIL,
                       hier.R_BACKOFF, hier.R_RESET}
         assert set(np.asarray(stf.pc)[stuck]).issubset(retry_loop)
@@ -145,21 +141,26 @@ def test_hypothesis_rma_rw(per_node, nodes, t_leaf, t_root, t_r, t_dc, wf,
 def test_hypothesis_rma_mcs(fan, t_leaf, seed):
     P = 16
     T_L = (1 << 20,) + tuple([max(1, t_leaf // 2)] * (len(fan) - 1)) + (t_leaf,)
-    lock = api.RMAMCSLock(P=P, fanout=fan, T_L=T_L)
-    m = run_lock(lock, target_acq=2, seed=seed)
+    m = run_spec(LockSpec(kind="rma_mcs", P=P, fanout=fan, T_L=T_L),
+                 target_acq=2, seed=seed)
     assert_correct(m, P * 2)
 
 
 # ------------------------------------------------- threshold semantics
 def test_locality_monotone_in_leaf_threshold():
     """Higher T_L at the leaf keeps more consecutive CS passes on-node
-    (the paper's locality/fairness trade, §3.2.2 / Fig. 4c)."""
+    (the paper's locality/fairness trade, §3.2.2 / Fig. 4c) — checked
+    through a single jit-batched T_L sweep."""
+    from repro.core import metrics_at
+    sess = Session(LockSpec(kind="rma_mcs", P=32, fanout=(4,),
+                            T_L=(1 << 20, 1)),
+                   target_acq=6, max_events=MAX_EVENTS)
+    m = sess.sweep("T_L", [(1 << 20, 1), (1 << 20, 16)], seeds=(3,))
     locs = []
-    for t in (1, 16):
-        lock = api.RMAMCSLock(P=32, fanout=(4,), T_L=(1 << 20, t))
-        m = run_lock(lock, target_acq=6, seed=3)
-        assert_correct(m, 32 * 6)
-        locs.append(float(m.locality))
+    for k in range(2):
+        mk = metrics_at(m, k, 0)
+        assert_correct(mk, 32 * 6)
+        locs.append(float(mk.locality))
     assert locs[1] > locs[0] + 0.2, f"locality {locs} not increasing with T_L"
 
 
@@ -173,18 +174,14 @@ def test_strict_tr_documented_corner():
     """
     from repro.core.programs import hier
     for wf in (0.0, 0.25):
-        lock = api.RMARWLock(P=8, fanout=(2,), T_DC=2, T_L=(2, 2), T_R=1,
-                             writer_fraction=wf)
-        env = lock.make_env(target_acq=3)
-        handlers = lock.program.build(env)
-        st0 = engine.init_state(env, lock.layout, lock.program.init_pc(env),
-                                lock.program.n_regs,
-                                lock.program.init_regs(env))
-        stf = engine._run(handlers, MAX_EVENTS, st0, 9)
+        spec = LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=2,
+                        T_L=(2, 2), T_R=1, writer_fraction=wf)
+        sess = session_for(spec, target_acq=3)
+        stf = sess.run_state(9)
         assert int(stf.violations) == 0          # ME always
         stuck = ~np.asarray(stf.done)
         if stuck.any():                          # only the documented corner
-            assert not np.asarray(env.is_writer)[stuck].any()
+            assert not np.asarray(sess.env.is_writer)[stuck].any()
             retry_loop = {hier.R_BARRIER, hier.R_FAO, hier.R_CHECK_TAIL,
                           hier.R_BACKOFF, hier.R_RESET}
             assert set(np.asarray(stf.pc)[stuck]).issubset(retry_loop)
@@ -192,25 +189,22 @@ def test_strict_tr_documented_corner():
 
 def test_small_tr_with_writers():
     """A modest T_R with writers present: handovers in both directions."""
-    lock = api.RMARWLock(P=8, fanout=(2,), T_DC=2, T_L=(2, 2), T_R=4,
-                         writer_fraction=0.25)
-    m = run_lock(lock, target_acq=3, seed=9)
+    spec = LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=2, T_L=(2, 2),
+                    T_R=4, writer_fraction=0.25)
+    m = run_spec(spec, target_acq=3, seed=9)
     assert_correct(m, 8 * 3)
 
 
 def test_dc_mode_flag_invariant():
     """After a full run the window counters are balanced: no reader left
     marked active and no WRITE flag left behind."""
-    lock = api.RMARWLock(P=8, fanout=(2,), T_DC=2, T_L=(2, 2), T_R=4,
-                         writer_fraction=0.25)
-    env = lock.make_env(target_acq=2)
-    handlers = lock.program.build(env)
-    st0 = engine.init_state(env, lock.layout, lock.program.init_pc(env),
-                            lock.program.n_regs, lock.program.init_regs(env))
-    stf = engine._run(handlers, MAX_EVENTS, st0, 4)
-    assert bool(jnp.all(stf.done))
-    arr = np.asarray(stf.window)[np.asarray(lock.layout.arrive_w)]
-    dep = np.asarray(stf.window)[np.asarray(lock.layout.depart_w)]
+    spec = LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=2, T_L=(2, 2),
+                    T_R=4, writer_fraction=0.25)
+    sess = session_for(spec, target_acq=2)
+    stf = sess.run_state(4)
+    assert bool(np.asarray(stf.done).all())
+    arr = np.asarray(stf.window)[np.asarray(sess.layout.arrive_w)]
+    dep = np.asarray(stf.window)[np.asarray(sess.layout.depart_w)]
     from repro.core.window import WRITE_FLAG
     flagged = arr >= int(WRITE_FLAG)
     assert np.all((arr - np.where(flagged, int(WRITE_FLAG), 0)) == dep)

@@ -1,0 +1,175 @@
+"""The declarative spec/session API: validation, serialization, the
+registry, batched execution, and parameter sweeps."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (LockSpec, Session, metrics_at, registered_kinds,
+                        writer_mask)
+
+MAX_EVENTS = 400_000
+
+SMALL_RW = LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=2, T_L=(2, 2),
+                    T_R=8, writer_fraction=0.25)
+
+
+# ------------------------------------------------------------ registry
+def test_registry_covers_all_lock_kinds():
+    from repro.core import api
+    assert set(registered_kinds()) == {"rma_rw", "rma_mcs", "d_mcs",
+                                       "fompi_spin", "fompi_rw"}
+    assert set(api.LOCKS) == set(registered_kinds())
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown lock kind"):
+        LockSpec(kind="zk_lock", P=8)
+
+
+# ---------------------------------------------------------- validation
+def test_validation_rejects_bad_points():
+    with pytest.raises(ValueError, match="not divisible"):
+        LockSpec(kind="rma_rw", P=10, fanout=(4,))
+    with pytest.raises(ValueError, match="T_DC"):
+        LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=0)
+    with pytest.raises(ValueError, match="T_R"):
+        LockSpec(kind="rma_rw", P=8, fanout=(2,), T_R=0)
+    with pytest.raises(ValueError, match="T_L"):
+        LockSpec(kind="rma_rw", P=8, fanout=(2,), T_L=(2, 2, 2))
+    with pytest.raises(ValueError, match="writer_fraction"):
+        LockSpec(kind="rma_rw", P=8, fanout=(2,), writer_fraction=1.5)
+
+
+def test_normalization():
+    # Flat kinds force a single root queue regardless of fanout.
+    assert LockSpec(kind="d_mcs", P=16, fanout=(4,)).fanout == ()
+    assert LockSpec(kind="fompi_rw", P=16, fanout=(4,)).fanout == ()
+    # Mutex-only kinds are all-writers.
+    s = LockSpec(kind="rma_mcs", P=16, fanout=(4,), writer_fraction=0.3)
+    assert s.writer_fraction == 1.0
+    assert s.roles().all()
+    # writer_fraction=None resolves to the kind's paper default.
+    assert LockSpec(kind="rma_rw", P=16, fanout=(4,)).writer_fraction == 0.002
+
+
+def test_writer_mask_roles():
+    mask = writer_mask(16, 0.25, seed=3)
+    assert mask.sum() == 4
+    assert not writer_mask(16, 0.0).any()
+    spec = LockSpec(kind="rma_rw", P=16, fanout=(4,),
+                    writer_fraction=0.25, role_seed=3)
+    np.testing.assert_array_equal(spec.roles(), mask)
+
+
+# ------------------------------------------------------- serialization
+@pytest.mark.parametrize("kind", sorted(registered_kinds()))
+def test_dict_and_json_round_trip_every_kind(kind):
+    spec = LockSpec.paper_default(kind, 32)
+    assert LockSpec.from_dict(spec.to_dict()) == spec
+    assert LockSpec.from_json(spec.to_json()) == spec
+
+
+def test_round_trip_preserves_custom_point():
+    spec = LockSpec(kind="rma_rw", P=24, fanout=(2, 3), T_DC=4,
+                    T_L=(2, 2, 3), T_R=12, writer_fraction=0.3,
+                    role_seed=5)
+    back = LockSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.T_L == (2, 2, 3) and back.cost == spec.cost
+
+
+def test_from_dict_partial_uses_constructor_defaults():
+    """A hand-written dict omitting optional keys must deserialize to
+    the same spec the constructor builds (same topology defaults)."""
+    assert (LockSpec.from_dict({"kind": "rma_rw", "P": 64})
+            == LockSpec(kind="rma_rw", P=64))
+
+
+def test_paper_default_matches_piz_daint_model():
+    spec = LockSpec.paper_default("rma_rw", 64)
+    assert spec.fanout == (4,)            # 16 processes/node
+    assert spec.T_L == (1 << 20, 64)
+    assert spec.T_DC == 16 and spec.T_R == 1024
+
+
+# ---------------------------------------------------- batched execution
+def test_run_batch_matches_single_runs_bitwise():
+    sess = Session(SMALL_RW, target_acq=3, max_events=MAX_EVENTS)
+    seeds = np.arange(32)
+    batch = sess.run_batch(seeds)
+    assert batch.violations.shape == (32,)
+    for s in [0, 7, 31]:
+        single = sess.run(int(seeds[s]))
+        for name, got, want in zip(batch._fields, metrics_at(batch, s),
+                                   single):
+            assert np.array_equal(np.asarray(got), np.asarray(want)), name
+
+
+def test_run_batch_deterministic():
+    sess = Session(SMALL_RW, target_acq=3, max_events=MAX_EVENTS)
+    a = sess.run_batch(np.arange(32))
+    b = sess.run_batch(np.arange(32))
+    for name, x, y in zip(a._fields, a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+def test_batched_zero_violations_32_seeds():
+    """The batched SPIN-checking analogue: >=32 distinct interleavings,
+    all safe and live."""
+    sess = Session(SMALL_RW, target_acq=3, max_events=MAX_EVENTS)
+    m = sess.run_batch(np.arange(32))
+    assert int(np.asarray(m.violations).sum()) == 0
+    assert bool(np.asarray(m.completed).all())
+    assert np.asarray(m.total_acquires).tolist() == [8 * 3] * 32
+
+
+# --------------------------------------------------------------- sweeps
+def test_sweep_tr_matches_independent_sessions():
+    sess = Session(SMALL_RW, target_acq=3, max_events=MAX_EVENTS)
+    values, seeds = [4, 8, 64], [0, 1]
+    m = sess.sweep("T_R", values, seeds=seeds)
+    assert m.violations.shape == (3, 2)
+    for k, tr in enumerate(values):
+        ref = Session(SMALL_RW.replace(T_R=tr), target_acq=3,
+                      max_events=MAX_EVENTS).run_batch(seeds)
+        for name, got, want in zip(m._fields, metrics_at(m, k), ref):
+            assert np.array_equal(np.asarray(got), np.asarray(want)), \
+                (tr, name)
+
+
+def test_sweep_writer_fraction_changes_roles():
+    sess = Session(SMALL_RW, target_acq=3, max_events=MAX_EVENTS)
+    m = sess.sweep("writer_fraction", [0.25, 1.0], seeds=[0, 1])
+    assert int(np.asarray(m.violations).sum()) == 0
+    assert bool(np.asarray(m.completed).all())
+    ref = Session(SMALL_RW.replace(writer_fraction=1.0), target_acq=3,
+                  max_events=MAX_EVENTS).run_batch([0, 1])
+    for name, got, want in zip(m._fields, metrics_at(m, 1), ref):
+        assert np.array_equal(np.asarray(got), np.asarray(want)), name
+
+
+def test_sweep_tdc_relayouts_per_point():
+    sess = Session(SMALL_RW, target_acq=2, max_events=MAX_EVENTS)
+    m = sess.sweep("T_DC", [1, 2, 4], seeds=[0])
+    assert m.violations.shape == (3, 1)
+    assert int(np.asarray(m.violations).sum()) == 0
+
+
+def test_sweep_rejects_unknown_axis():
+    sess = Session(SMALL_RW, target_acq=2)
+    with pytest.raises(ValueError, match="axis"):
+        sess.sweep("procs", [1, 2])
+
+
+# -------------------------------------------------- deprecation shims
+def test_api_shim_still_runs_and_warns():
+    from repro.core import api
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        lock = api.RMARWLock(P=8, fanout=(2,), T_DC=2, T_L=(2, 2), T_R=8,
+                             writer_fraction=0.25)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    m = lock.run(target_acq=2, seed=0, max_events=MAX_EVENTS)
+    assert int(m.violations) == 0 and bool(m.completed)
+    assert lock.spec == SMALL_RW
