@@ -1,10 +1,16 @@
 """Benchmark driver: one section per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
+    PYTHONPATH=src python -m benchmarks.run --tune [--quick]
 
 Writes results/bench/*.csv and prints a summary. Simulated latencies /
 throughputs come from the calibrated cost model (DESIGN.md §4); the
 roofline section reads the dry-run artifacts if present.
+
+`--tune` runs the coarse-to-fine (T_DC, T_L, T_R) grid auto-tuner
+(repro.core.tuner) for the paper's benchmark workload and writes the
+winning LockSpec + evidence to results/bench/tuned_spec.json; the
+embedded spec round-trips through `LockSpec.from_dict` unchanged.
 """
 from __future__ import annotations
 
@@ -36,6 +42,36 @@ def show(title, rows, cols):
             else f"{str(r.get(c, '')):>16s}" for c in cols))
 
 
+def run_tuner(args) -> str:
+    """`--tune`: grid-search the 3D space for the benchmark workload and
+    emit the winning LockSpec as JSON."""
+    import json
+
+    from repro.core import LockSpec
+    from repro.core.tuner import tune
+
+    P = 16 if args.quick else (256 if args.full else 64)
+    spec = LockSpec.paper_default("rma_rw", P, writer_fraction=0.05)
+    res = tune(spec,
+               seeds=(0, 1) if args.quick else tuple(range(4)),
+               refine_rounds=0 if args.quick else (2 if args.full else 1),
+               target_acq=2 if args.quick else 4,
+               max_events=400_000 if args.quick else 2_000_000)
+    # The emitted spec must survive serialization exactly — it is the
+    # deployment artifact.
+    assert LockSpec.from_dict(res.to_dict()["spec"]) == res.spec
+    path = os.path.join(RESULTS, "tuned_spec.json")
+    with open(path, "w") as f:
+        json.dump(res.to_dict(), f, indent=2, sort_keys=True)
+    print(f"\n== TUNE: best (T_DC, T_L, T_R) point for rma_rw P={P} ==")
+    print(f"  winner: T_DC={res.spec.T_DC} T_L={res.spec.T_L} "
+          f"T_R={res.spec.T_R}")
+    print(f"  {res.objective}: {res.score:.4g} "
+          f"({res.n_points} lattice points, {len(res.rounds)} rounds)")
+    print(f"  report: {path}")
+    return path
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -45,8 +81,18 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma list: lb,ecsb,sob,wcsb,warb,rw,tdc,tl,tr,"
                          "dht,table,kernels,roofline")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the 3D grid auto-tuner and write "
+                         "results/bench/tuned_spec.json")
     args = ap.parse_args(argv)
     os.makedirs(RESULTS, exist_ok=True)
+
+    if args.tune:
+        if args.only:
+            print("note: --tune runs alone; ignoring --only "
+                  f"{args.only!r} (run the sections without --tune)")
+        run_tuner(args)
+        return
 
     from benchmarks import dht_bench, kernels_bench, locks, roofline, thresholds
 

@@ -4,10 +4,11 @@
   sweep_tl   (4b-d): locality thresholds T_L,i (product + split)
   sweep_tr   (4e-f): reader batch T_R, crossed with F_W
 
-Each figure is a `Session.sweep` call: T_L and T_R scans run as ONE
-jitted dispatch over (points x seeds); T_DC changes the window layout
-(counter placement), so it compiles per point while still batching
-seeds.
+Each figure is a `Session.sweep` call running as ONE jitted dispatch
+over (points x seeds) — including T_DC: window layouts are padded to a
+common counter-slot count (shape-stable), so counter placement is a
+traced value and the whole axis compiles once. `Session.grid` composes
+all three axes for the tuner (`benchmarks.run --tune`).
 """
 from __future__ import annotations
 

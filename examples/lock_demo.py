@@ -1,9 +1,12 @@
 """Lock family tour: every protocol of the paper on one workload, plus
 the locality/fairness dial (T_L) and the reader/writer dial (T_R) --
-each dial turned with one jit-batched `Session.sweep` call.
+each dial turned with one jit-batched `Session.sweep` call -- and the
+full 3D (T_DC, T_L, T_R) lattice in one `Session.grid` dispatch.
 
     PYTHONPATH=src python examples/lock_demo.py
 """
+import numpy as np
+
 from repro.core import LockSpec, Session, metrics_at, registered_kinds
 
 P = 64
@@ -44,3 +47,13 @@ m = rw.sweep("T_R", trs)
 for i, t_r in enumerate(trs):
     mi = metrics_at(m, i, 0)
     print(f"  T_R={t_r:5d}: throughput={float(mi.throughput):10.3g}/s")
+
+print("\n== the full 3D space (Fig. 4 in ONE dispatch) ==")
+t_dc, t_l, t_r = (1, 16, 64), ((1 << 20, 1), (1 << 20, 16)), (64, 1024)
+g = rw.grid(t_dc, t_l, t_r, seeds=(0,))
+assert int(np.asarray(g.violations).sum()) == 0
+tput = np.asarray(g.throughput)[..., 0]            # [T_DC, T_L, T_R]
+best = np.unravel_index(np.argmax(tput), tput.shape)
+print(f"  {tput.size} lattice points, one compile; best point "
+      f"T_DC={t_dc[best[0]]} T_L={t_l[best[1]]} T_R={t_r[best[2]]} "
+      f"at {tput[best]:.3g}/s (see also: python -m benchmarks.run --tune)")

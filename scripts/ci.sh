@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# CI gate: install dev deps, run tier-1 tests, smoke one benchmark.
+# CI gate: install dev deps, run tier-1 tests, smoke one benchmark,
+# then guard the single-dispatch grid path (compile-count check) and
+# dry-run the tuner CLI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -8,3 +10,5 @@ python -m pip install -r requirements-dev.txt
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python -m benchmarks.run --quick --only lb
+python scripts/grid_smoke.py
+python -m benchmarks.run --tune --quick

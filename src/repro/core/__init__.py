@@ -10,6 +10,10 @@ layers:
     under one seed, a batch of seeds (single dispatch), or a jit-
     batched parameter sweep.
 
+  * `tune` (repro.core.tuner): coarse-to-fine grid search over the full
+    3D space — one `Session.grid` dispatch per round — emitting the
+    winning `LockSpec` as JSON.
+
 `repro.core.api` keeps the deprecated per-kind classes as shims.
 """
 from repro.core.engine import Metrics
@@ -17,9 +21,11 @@ from repro.core.session import DYNAMIC_AXES, SWEEP_AXES, Session, metrics_at
 from repro.core.spec import (EXTRA_WORDS, PROCS_PER_NODE, LockKind,
                              LockSpec, get_kind, register_kind,
                              registered_kinds, writer_mask)
+from repro.core.tuner import TuneResult, tune
 
 __all__ = [
     "DYNAMIC_AXES", "EXTRA_WORDS", "LockKind", "LockSpec", "Metrics",
-    "PROCS_PER_NODE", "SWEEP_AXES", "Session", "get_kind", "metrics_at",
-    "register_kind", "registered_kinds", "writer_mask",
+    "PROCS_PER_NODE", "SWEEP_AXES", "Session", "TuneResult", "get_kind",
+    "metrics_at", "register_kind", "registered_kinds", "tune",
+    "writer_mask",
 ]

@@ -72,11 +72,18 @@ class Env:
     next_t: jnp.ndarray       # [N, maxE] word tables
     status_t: jnp.ndarray     # [N, maxE]
     tail_t: jnp.ndarray       # [N, maxJ]
-    arrive_w: jnp.ndarray     # [C]
-    depart_w: jnp.ndarray     # [C]
-    ctr_rank: jnp.ndarray     # [C]
+    arrive_w: jnp.ndarray     # [C_pad]
+    depart_w: jnp.ndarray     # [C_pad]
+    ctr_rank: jnp.ndarray     # [C_pad]
     ctr_of_p: jnp.ndarray     # [P]
-    C: int
+    # Traced counter validity mask ([C_pad] bool; False = padded slot).
+    # Replaces the old static `int C`: the number of live counters is a
+    # VALUE, not a shape, so T_DC points share one compiled program.
+    ctr_mask: jnp.ndarray
+    # Scratch word indices ([extra_words]) — traced for the same
+    # reason: absolute positions shift with counter padding, so
+    # programs (the foMPI baselines) must read them from the env.
+    scratch_w: jnp.ndarray
     ent_of_p: jnp.ndarray     # [N, P]
     elem_of_p: jnp.ndarray    # [N, P]
     same_leaf: jnp.ndarray    # [P, P] bool (locality statistics)
@@ -94,6 +101,12 @@ class Env:
 
     def lat_atomic(self, p, word):
         return self.atomic[p, self.owner[word]]
+
+    @property
+    def n_ctr(self):
+        """Number of live counters — a traced value (the counter loops'
+        bound), constant-folded when ctr_mask is concrete."""
+        return jnp.sum(self.ctr_mask.astype(jnp.int32))
 
 
 # Handler signature: (env, p, now, key, st) -> SimState
@@ -224,16 +237,37 @@ def derive_tw(T_L) -> int:
     return int(np.minimum(np.prod(T_L.astype(np.int64)), 1 << 26))
 
 
-def memoized_build(cache: dict, env: Env, builder):
+MEMO_MAX_ENTRIES = 8
+
+
+def memoized_build(cache: dict, env: Env, builder,
+                   max_entries: int = MEMO_MAX_ENTRIES):
     """Per-env handler memoization shared by the program classes.
 
     Keyed by id but holding the env ref: the entry pins the object
     alive, so a freed-and-reused id can never alias a stale entry.
+    Bounded LRU (most recent `max_entries` envs) so a program object
+    streaming many envs through `build()` does not itself pin every env
+    (and its device arrays) it ever saw. Scope of that bound: handlers
+    that were *executed* through the jitted `_run`/`_run_batch` entry
+    points stay referenced by JAX's own jit cache (they are static
+    args) regardless of eviction here, and re-building an evicted env
+    produces fresh closures, i.e. a recompile — callers that alternate
+    more than `max_entries` live envs through ONE program should hold
+    their own handler refs (as `Session` does) or raise the bound.
+    Sweep/grid tracing is unaffected: it uses `_build` directly.
     """
-    cached = cache.get(id(env))
-    if cached is None or cached[0] is not env:
-        cache[id(env)] = (env, builder(env))
-    return cache[id(env)][1]
+    key = id(env)
+    cached = cache.get(key)
+    if cached is not None and cached[0] is env:
+        cache[key] = cache.pop(key)       # refresh LRU position
+        return cached[1]
+    handlers = builder(env)
+    cache.pop(key, None)                  # stale id-reuse entry, if any
+    cache[key] = (env, handlers)
+    while len(cache) > max_entries:
+        cache.pop(next(iter(cache)))
+    return handlers
 
 
 def make_env(m: Machine, layout: Layout, *, T_L=None, T_R=1 << 26,
@@ -258,7 +292,9 @@ def make_env(m: Machine, layout: Layout, *, T_L=None, T_R=1 << 26,
         arrive_w=jnp.asarray(layout.arrive_w),
         depart_w=jnp.asarray(layout.depart_w),
         ctr_rank=jnp.asarray(layout.ctr_rank),
-        ctr_of_p=jnp.asarray(layout.ctr_of_p), C=layout.C,
+        ctr_of_p=jnp.asarray(layout.ctr_of_p),
+        ctr_mask=jnp.asarray(layout.ctr_mask),
+        scratch_w=jnp.asarray(layout.scratch_w),
         ent_of_p=jnp.asarray(layout.ent_of_p),
         elem_of_p=jnp.asarray(layout.elem_of_p),
         same_leaf=jnp.asarray(same_leaf),

@@ -10,7 +10,13 @@ SC'13), the paper's §5 baselines.
     counter to drain.
 
 Both use the same simulator/cost model as the proposed locks, so the
-comparison isolates protocol design (as in the paper).
+comparison isolates protocol design (as in the paper). The baselines
+live entirely in the window's scratch region and are addressed through
+`env.scratch_w` SLOTS, never absolute word indices: absolute positions
+shift with counter padding (shape-stable T_DC layouts), so routing them
+through the env is what lets the baselines join one-dispatch
+`Session.grid` / `sweep("T_DC", ...)` scans bitwise-identically to
+fresh per-point sessions.
 """
 from __future__ import annotations
 
@@ -31,12 +37,12 @@ R_INC, R_CHECK, R_UNDO, R_CS, R_REL, R_DONE = 5, 6, 7, 8, 9, 10
 
 
 class FompiSpin:
-    """CAS spin lock on window word `lock_word`."""
+    """CAS spin lock on scratch slot `lock_slot`."""
 
     n_regs = 2
 
-    def __init__(self, lock_word: int):
-        self.lock_word = int(lock_word)
+    def __init__(self, lock_slot: int = 0):
+        self.lock_slot = int(lock_slot)
         self._cache = {}
 
     def init_pc(self, env: Env):
@@ -51,7 +57,7 @@ class FompiSpin:
         return memoized_build(self._cache, env, self._build)
 
     def _build(self, env: Env):
-        LW = self.lock_word
+        LW = env.scratch_w[self.lock_slot]
 
         def s_try(p, now, key, st: SimState):
             cur = st.window[LW]
@@ -97,13 +103,13 @@ class FompiSpin:
 
 
 class FompiRW:
-    """Centralized reader-writer lock: RCNT word + WFLAG word."""
+    """Centralized reader-writer lock: RCNT + WFLAG scratch slots."""
 
     n_regs = 2
 
-    def __init__(self, rcnt_word: int, wflag_word: int):
-        self.rcnt = int(rcnt_word)
-        self.wflag = int(wflag_word)
+    def __init__(self, rcnt_slot: int = 0, wflag_slot: int = 1):
+        self.rcnt_slot = int(rcnt_slot)
+        self.wflag_slot = int(wflag_slot)
         self._cache = {}
 
     def init_pc(self, env: Env):
@@ -120,7 +126,8 @@ class FompiRW:
         return memoized_build(self._cache, env, self._build)
 
     def _build(self, env: Env):
-        RC, WF = self.rcnt, self.wflag
+        RC = env.scratch_w[self.rcnt_slot]
+        WF = env.scratch_w[self.wflag_slot]
 
         def w_try(p, now, key, st: SimState):
             cur = st.window[WF]

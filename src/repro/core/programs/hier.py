@@ -179,13 +179,18 @@ class HierProgram:
                                 writes=[w], next_pc=nxt, regs_row=r,
                                 window=win)
 
+        # Counter loops (Listing 6) are register-K state machines bounded
+        # by env.n_ctr — a traced VALUE derived from the counter mask, not
+        # a static shape. K only ever indexes live slots (k < n_ctr), so
+        # padded counter words stay untouched and one compiled program
+        # serves every T_DC point of the machine (shape-stable layouts).
         def w_sctw_flag(p, now, key, st: SimState):
             """Listing 6 set_counters_to_WRITE phase 1: flag counter K."""
             r = st.regs[p]
             k = r[K]
             w = env.arrive_w[k]
             win = st.window.at[w].add(WRITE_FLAG)
-            last = k + 1 >= env.C
+            last = k + 1 >= env.n_ctr
             r = r.at[K].set(jnp.where(last, 0, k + 1))
             nxt = jnp.where(last, W_SCTW_VERIFY, W_SCTW_FLAG)
             return finish_instr(env, st, p, now, key,
@@ -201,7 +206,7 @@ class HierProgram:
             wa, wd = env.arrive_w[k], env.depart_w[k]
             arr, dep = st.window[wa], st.window[wd]
             clear = (arr - WRITE_FLAG) == dep
-            last = k + 1 >= env.C
+            last = k + 1 >= env.n_ctr
             r = r.at[K].set(jnp.where(clear & ~last, k + 1,
                                       jnp.where(clear & last, 0, k)))
             nxt = jnp.where(~clear, W_SCTW_VERIFY,
@@ -290,7 +295,7 @@ class HierProgram:
             arr, dep = st.window[wa], st.window[wd]
             sub_arr = -dep - jnp.where(arr >= WRITE_FLAG, WRITE_FLAG, 0)
             win = st.window.at[wa].add(sub_arr).at[wd].add(-dep)
-            last = k + 1 >= env.C
+            last = k + 1 >= env.n_ctr
             r = r.at[K].set(jnp.where(last, 0, k + 1))
             r = jnp.where(last,
                           r.at[NEXT_STAT].set(MODE_CHANGE).at[CRESET].set(1),

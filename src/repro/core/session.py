@@ -11,13 +11,19 @@ jitted simulator once, and then offers three execution shapes:
     paper's SPIN model checking (§4.4) — and of its throughput error
     bars.
   * `sweep(axis, values, seeds=...)` — jit-batched scan over one axis
-    of the paper's parameter space. For `T_L`, `T_R`, and
-    `writer_fraction` the scan is a single dispatch vmapped over
-    (points x seeds): those axes only change *values* in the
-    environment, never array shapes. `T_DC` changes the window layout
-    (counter placement), so it compiles per point but still batches
-    seeds. This turns the paper's Fig. 4 threshold sweeps and Fig. 5
-    writer-fraction scans into one call each.
+    of the paper's parameter space as a SINGLE dispatch vmapped over
+    (points x seeds). `T_L`, `T_R`, and `writer_fraction` only change
+    *values* in the environment. `T_DC` changes counter placement, but
+    layouts are padded to a common max-C (`build_layout`'s
+    `pad_counters_to`) with a traced `ctr_mask`, so its points are
+    shape-stable too and the whole axis traces once. This turns the
+    paper's Fig. 4 threshold sweeps and Fig. 5 writer-fraction scans
+    into one call each.
+  * `grid(t_dc, t_l, t_r, seeds=...)` — the paper's FULL 3D parameter
+    space (§3.2) × seeds as one jitted dispatch; Metrics leaves gain
+    leading [D, L, R, S] axes. This is the substrate of the
+    `repro.core.tuner` auto-tuner and of multi-device sharded
+    exploration.
 
 Seed-level caching: the jitted program is cached per (handlers,
 max_events) by JAX, and handlers are cached per environment by the
@@ -35,11 +41,15 @@ import numpy as np
 
 from repro.core import engine
 from repro.core.spec import EXTRA_WORDS, LockSpec
+from repro.core.topology import counter_ranks
+from repro.core.window import build_layout
 
-# Axes of `sweep`. Dynamic axes share one compiled program (values are
-# traced); T_DC re-lays out the window, so it recompiles per point.
-DYNAMIC_AXES = ("T_L", "T_R", "writer_fraction")
-SWEEP_AXES = DYNAMIC_AXES + ("T_DC",)
+# Axes of `sweep`. ALL axes share one compiled program: T_L / T_R /
+# writer_fraction are plain traced values, and T_DC points are padded to
+# a common counter-slot count so even counter placement is a traced
+# value (ctr_mask), never a shape.
+DYNAMIC_AXES = ("T_DC", "T_L", "T_R", "writer_fraction")
+SWEEP_AXES = DYNAMIC_AXES
 
 
 def metrics_at(m: engine.Metrics, *index) -> engine.Metrics:
@@ -48,9 +58,17 @@ def metrics_at(m: engine.Metrics, *index) -> engine.Metrics:
     return engine.Metrics(*(leaf[index] for leaf in m))
 
 
-def _stack_metrics(ms) -> engine.Metrics:
-    return engine.Metrics(*(jnp.stack(leaves)
-                            for leaves in zip(*(tuple(m) for m in ms))))
+def _tl_dyn(spec: LockSpec) -> dict:
+    """Env overrides realizing one spec's T_L point (shared by sweep and
+    grid so the threshold encoding cannot drift between them)."""
+    T_L = np.asarray(spec.T_L if spec.T_L is not None
+                     else [1 << 26] * spec.n_levels, np.int32)
+    return {"T_L": jnp.asarray(T_L),
+            "T_W": jnp.int32(engine.derive_tw(T_L))}
+
+
+def _tr_dyn(spec: LockSpec) -> dict:
+    return {"T_R": jnp.int32(spec.T_R)}
 
 
 class Session:
@@ -106,38 +124,87 @@ class Session:
         return [self.spec.replace(**{axis: v}) for v in values]
 
     def sweep(self, axis: str, values, *, seeds=(0,)) -> engine.Metrics:
-        """Scan one parameter axis under a batch of seeds.
+        """Scan one parameter axis under a batch of seeds — ONE jitted
+        dispatch for every axis, including T_DC (points are padded to a
+        common counter-slot count, so counter placement is a traced
+        value rather than a shape).
 
         Returns stacked Metrics with leading axes [len(values),
         len(seeds)]; index with `metrics_at(m, k, s)`.
         """
         specs = self.specs_along(axis, values)
         seeds = jnp.asarray(seeds, jnp.int32)
-        if axis == "T_DC":
-            # Counter placement changes the window layout (array
-            # shapes): compile per point, batch seeds within each.
-            return _stack_metrics([
-                Session(s, target_acq=self.target_acq,
-                        cs_kind=self.cs_kind, think=self.think,
-                        max_events=self.max_events,
-                        extra_words=self.extra_words).run_batch(seeds)
-                for s in specs])
         dyn, st0 = self._sweep_points(axis, specs)
-        if self._sweep_fn is None:
-            self._sweep_fn = self._build_sweep_fn()
-        return self._sweep_fn(dyn, st0, seeds)
+        return self._dispatch(dyn, st0, seeds)
+
+    def grid(self, t_dc, t_l, t_r, *, seeds=(0,)) -> engine.Metrics:
+        """Scan the paper's full 3D (T_DC, T_L, T_R) lattice under a
+        batch of seeds as ONE jitted dispatch.
+
+        `t_l` entries are per-level threshold tuples (or None for
+        unbounded). Roles (writer_fraction) are those of the session's
+        spec. Returns stacked Metrics with leading axes
+        [len(t_dc), len(t_l), len(t_r), len(seeds)]; index with
+        `metrics_at(m, d, l, r, s)`. Each lattice point is bitwise-equal
+        to a fresh per-point `Session.run_batch` — padding only adds
+        dead masked counter slots, never dynamics.
+        """
+        t_dc = [int(v) for v in t_dc]
+        t_l = [v if v is None else tuple(int(x) for x in v) for v in t_l]
+        t_r = [int(v) for v in t_r]
+        if not (t_dc and t_l and t_r):
+            raise ValueError("grid axes must be non-empty")
+        seeds = jnp.asarray(seeds, jnp.int32)
+        C_pad = max(len(counter_ranks(self.machine, d)) for d in t_dc)
+        dyns, states = [], []
+        for d in t_dc:
+            layout_d, ldyn = self._layout_dyn(d, C_pad)
+            # Roles are fixed across the lattice, so the initial state
+            # only depends on the (padded, T_DC-invariant) layout.
+            st_d = engine.init_state(
+                self.env, layout_d, self.program.init_pc(self.env),
+                self.program.n_regs, self.program.init_regs(self.env))
+            for l in t_l:
+                for r in t_r:
+                    spec_k = self.spec.replace(T_DC=d, T_L=l, T_R=r)
+                    dyns.append(dict(ldyn, **_tl_dyn(spec_k),
+                                     **_tr_dyn(spec_k)))
+                    states.append(st_d)
+        dyn = {k: jnp.stack([dd[k] for dd in dyns]) for k in dyns[0]}
+        st0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        m = self._dispatch(dyn, st0, seeds)
+        shape = (len(t_dc), len(t_l), len(t_r))
+        return engine.Metrics(
+            *(leaf.reshape(shape + leaf.shape[1:]) for leaf in m))
+
+    def _layout_dyn(self, T_DC: int, C_pad: int):
+        """Padded layout for one T_DC point + the env overrides that
+        realize it (all shape-stable at C_pad counter slots)."""
+        layout = build_layout(self.machine, T_DC,
+                              extra_words=self.extra_words,
+                              pad_counters_to=C_pad)
+        dyn = {"owner": jnp.asarray(layout.owner),
+               "arrive_w": jnp.asarray(layout.arrive_w),
+               "depart_w": jnp.asarray(layout.depart_w),
+               "ctr_rank": jnp.asarray(layout.ctr_rank),
+               "ctr_of_p": jnp.asarray(layout.ctr_of_p),
+               "ctr_mask": jnp.asarray(layout.ctr_mask),
+               "scratch_w": jnp.asarray(layout.scratch_w)}
+        return layout, dyn
 
     def _sweep_points(self, axis: str, specs):
         """Stacked per-point env overrides + initial states (numpy)."""
+        C_pad = (max(len(counter_ranks(self.machine, s.T_DC))
+                     for s in specs) if axis == "T_DC" else None)
         dyns, states = [], []
         for s in specs:
+            layout = self.layout
             if axis == "T_R":
-                dyn = {"T_R": jnp.int32(s.T_R)}
+                dyn = _tr_dyn(s)
             elif axis == "T_L":
-                T_L = np.asarray(s.T_L if s.T_L is not None
-                                 else [1 << 26] * s.n_levels, np.int32)
-                dyn = {"T_L": jnp.asarray(T_L),
-                       "T_W": jnp.int32(engine.derive_tw(T_L))}
+                dyn = _tl_dyn(s)
+            elif axis == "T_DC":
+                layout, dyn = self._layout_dyn(s.T_DC, C_pad)
             else:                 # writer_fraction: roles change
                 dyn = {"is_writer": jnp.asarray(s.roles())}
             env_k = dataclasses.replace(self.env, **{
@@ -145,12 +212,17 @@ class Session:
             # init_pc depends on roles (readers start in the reader
             # program), so the initial state is built per point.
             states.append(engine.init_state(
-                env_k, self.layout, self.program.init_pc(env_k),
+                env_k, layout, self.program.init_pc(env_k),
                 self.program.n_regs, self.program.init_regs(env_k)))
             dyns.append(dyn)
         dyn = {k: jnp.stack([d[k] for d in dyns]) for k in dyns[0]}
         st0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
         return dyn, st0
+
+    def _dispatch(self, dyn, st0, seeds) -> engine.Metrics:
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep_fn()
+        return self._sweep_fn(dyn, st0, seeds)
 
     def _build_sweep_fn(self):
         program, env, max_events = self.program, self.env, self.max_events

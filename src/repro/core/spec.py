@@ -101,16 +101,18 @@ register_kind(LockKind(
     name="d_mcs", paper_section="§2.4", has_readers=False, flat=True,
     default_writer_fraction=1.0,
     make_program=lambda spec, layout: hier.d_mcs()))
+# The foMPI baselines address scratch SLOTS resolved through the env
+# (env.scratch_w), never absolute layout indices: absolute word
+# positions shift with counter padding under shape-stable T_DC sweeps.
 register_kind(LockKind(
     name="fompi_spin", paper_section="§5", has_readers=False, flat=True,
     default_writer_fraction=1.0,
-    make_program=lambda spec, layout: fompi.FompiSpin(
-        lock_word=layout.W - 4)))
+    make_program=lambda spec, layout: fompi.FompiSpin(lock_slot=0)))
 register_kind(LockKind(
     name="fompi_rw", paper_section="§5", has_readers=True, flat=True,
     default_writer_fraction=0.002,
     make_program=lambda spec, layout: fompi.FompiRW(
-        rcnt_word=layout.W - 4, wflag_word=layout.W - 3)))
+        rcnt_slot=0, wflag_slot=1)))
 
 
 @dataclasses.dataclass(frozen=True)

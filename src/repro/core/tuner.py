@@ -1,0 +1,211 @@
+"""Coarse-to-fine auto-tuner over the paper's 3D lock parameter space.
+
+The paper's central claim is that a lock is a *point* in the space
+spanned by (T_DC, T_L, T_R) (§3.2) and that the right point depends on
+the workload (reader/writer mix, contention, topology). The tuner makes
+that operational, in the spirit of BRAVO-style runtime re-biasing (Dice
+& Kogan, *BRAVO: Biased Locking for Reader-Writer Locks*): evaluate a
+coarse lattice over the whole space, zoom into the neighborhood of the
+winner, and emit the winning `LockSpec` as JSON for deployment.
+
+Every round is ONE `Session.grid` dispatch (shape-stable padded
+window layouts make T_DC a traced axis), so a tune is a handful of
+compiles total — not one per lattice point. Scores are averaged over a
+seed batch of schedule interleavings; any point that violates mutual
+exclusion or fails to complete under any seed is disqualified outright.
+
+    from repro.core import LockSpec
+    from repro.core.tuner import tune
+
+    result = tune(LockSpec.paper_default("rma_rw", 64), seeds=range(4))
+    result.spec              # the winning point (a plain LockSpec)
+    result.to_json()         # full report; spec round-trips exactly
+
+The CLI lives in `benchmarks/run.py --tune`, which writes the report to
+`results/bench/tuned_spec.json`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core.session import Session
+from repro.core.spec import LockSpec
+
+OBJECTIVES = ("throughput", "latency")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one `tune` call: the winning point + its evidence."""
+
+    spec: LockSpec                # winner; run it to reproduce the score
+    objective: str
+    score: float                  # objective value at the winner
+    throughput: float             # mean acquires/s over seeds at winner
+    latency_us: float             # mean acquire latency at winner
+    seeds: tuple
+    throughput_per_seed: tuple    # bitwise-reproducible per-seed values
+    n_points: int                 # distinct lattice points evaluated
+    rounds: tuple                 # per-round lattices + incumbents
+
+    def to_dict(self) -> dict:
+        return {
+            "spec": self.spec.to_dict(),
+            "objective": self.objective,
+            "score": self.score,
+            "throughput": self.throughput,
+            "latency_us": self.latency_us,
+            "seeds": list(self.seeds),
+            "throughput_per_seed": list(self.throughput_per_seed),
+            "n_points": self.n_points,
+            "rounds": [dict(r) for r in self.rounds],
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "TuneResult":
+        d = json.loads(s)
+        return cls(
+            spec=LockSpec.from_dict(d["spec"]), objective=d["objective"],
+            score=d["score"], throughput=d["throughput"],
+            latency_us=d["latency_us"], seeds=tuple(d["seeds"]),
+            throughput_per_seed=tuple(d["throughput_per_seed"]),
+            n_points=d["n_points"],
+            rounds=tuple(_round_from_dict(r) for r in d["rounds"]))
+
+
+def _round_from_dict(r: dict) -> dict:
+    r = dict(r)
+    r["t_l"] = [None if v is None else tuple(v) for v in r["t_l"]]
+    r["best"] = _key_from_json(r["best"])
+    return r
+
+
+def _key_from_json(k) -> tuple:
+    d, l, r = k
+    return (int(d), None if l is None else tuple(l), int(r))
+
+
+def default_lattice(spec: LockSpec) -> dict:
+    """Coarse starting lattice: geometric coverage of each axis.
+
+    T_DC spans one-counter-per-process (1) .. one shared counter (P);
+    T_L varies the leaf (local-pass) threshold around the spec's own
+    point; T_R spans small to effectively-unbounded reader batches.
+    """
+    P = spec.P
+    t_dc = sorted({d for d in (1, 4, 16, 64, 256, P) if d <= P})
+    if spec.T_L is None:
+        t_l = [None]
+    else:
+        base = spec.T_L
+        t_l = [base[:-1] + (leaf,)
+               for leaf in sorted({1, 8, 64, base[-1]})]
+    t_r = [16, 256, 4096]
+    return {"t_dc": t_dc, "t_l": t_l, "t_r": t_r}
+
+
+def _geo_mid(a: int, b: int) -> int:
+    return int(round((a * b) ** 0.5))
+
+
+def _refine_ints(values, best: int) -> list:
+    """Geometric midpoints between the incumbent and its lattice
+    neighbors (coarse-to-fine zoom on one integer axis)."""
+    vals = sorted(set(values))
+    i = vals.index(best)
+    out = {best}
+    for j in (i - 1, i + 1):
+        if 0 <= j < len(vals):
+            mid = _geo_mid(best, vals[j])
+            if mid not in vals:
+                out.add(mid)
+    return sorted(out)
+
+
+def _refine_lattice(lattice: dict, best: tuple) -> dict:
+    d, l, r = best
+    t_l = lattice["t_l"]
+    if l is not None and None not in t_l:
+        leafs = sorted({v[-1] for v in t_l})
+        t_l = [l[:-1] + (leaf,) for leaf in _refine_ints(leafs, l[-1])]
+    return {"t_dc": _refine_ints(lattice["t_dc"], d),
+            "t_l": t_l,
+            "t_r": _refine_ints(lattice["t_r"], r)}
+
+
+def tune(spec: LockSpec, *, t_dc=None, t_l=None, t_r=None,
+         seeds=(0, 1), refine_rounds: int = 1, target_acq: int = 4,
+         cs_kind: int = 0, think: bool = False,
+         max_events: int = 2_000_000,
+         objective: str = "throughput") -> TuneResult:
+    """Search the (T_DC, T_L, T_R) space for the workload described by
+    (spec roles + cs_kind/think), one `Session.grid` dispatch per round.
+
+    Axis candidates default to `default_lattice(spec)`; pass explicit
+    lists to pin or narrow an axis. `refine_rounds` extra rounds zoom
+    geometrically around the incumbent. Returns the best point seen.
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"objective must be one of {OBJECTIVES}, "
+                         f"got {objective!r}")
+    lattice = default_lattice(spec)
+    if t_dc is not None:
+        lattice["t_dc"] = sorted({int(v) for v in t_dc})
+    if t_l is not None:
+        lattice["t_l"] = [None if v is None else tuple(v) for v in t_l]
+    if t_r is not None:
+        lattice["t_r"] = sorted({int(v) for v in t_r})
+    seeds = tuple(int(s) for s in seeds)
+
+    sess = Session(spec, target_acq=target_acq, cs_kind=cs_kind,
+                   think=think, max_events=max_events)
+    evaluated: dict = {}          # (d, l, r) -> (score, tput, lat, per_seed)
+    rounds = []
+    for rnd in range(refine_rounds + 1):
+        m = sess.grid(lattice["t_dc"], lattice["t_l"], lattice["t_r"],
+                      seeds=seeds)
+        viol = np.asarray(m.violations).sum(axis=-1)
+        comp = np.asarray(m.completed).all(axis=-1)
+        tput_s = np.asarray(m.throughput)
+        tput = tput_s.mean(axis=-1)
+        lat = np.asarray(m.mean_latency).mean(axis=-1)
+        valid = (viol == 0) & comp
+        if objective == "throughput":
+            score = np.where(valid, tput, -np.inf)
+        else:
+            score = np.where(valid, -lat, -np.inf)
+        for di, d in enumerate(lattice["t_dc"]):
+            for li, l in enumerate(lattice["t_l"]):
+                for ri, r in enumerate(lattice["t_r"]):
+                    evaluated[(d, l, r)] = (
+                        float(score[di, li, ri]), float(tput[di, li, ri]),
+                        float(lat[di, li, ri]),
+                        tuple(float(x) for x in tput_s[di, li, ri]))
+        best = max(evaluated, key=lambda k: evaluated[k][0])
+        if not np.isfinite(evaluated[best][0]):
+            # Fail fast: refining around an arbitrary disqualified
+            # point would only burn more grid dispatches.
+            raise RuntimeError(
+                "no lattice point completed without violations; widen "
+                "the lattice or raise max_events")
+        rounds.append({"t_dc": list(lattice["t_dc"]),
+                       "t_l": list(lattice["t_l"]),
+                       "t_r": list(lattice["t_r"]),
+                       "best": best, "best_score": evaluated[best][0]})
+        if rnd < refine_rounds:
+            lattice = _refine_lattice(lattice, best)
+
+    best = max(evaluated, key=lambda k: evaluated[k][0])
+    b_score, b_tput, b_lat, b_per_seed = evaluated[best]
+    d, l, r = best
+    return TuneResult(
+        spec=spec.replace(T_DC=d, T_L=l, T_R=r), objective=objective,
+        score=b_score, throughput=b_tput, latency_us=b_lat, seeds=seeds,
+        throughput_per_seed=b_per_seed, n_points=len(evaluated),
+        rounds=tuple(rounds))

@@ -42,23 +42,40 @@ class Layout:
     status_w: tuple              # len N, [n_entities_i] word of STATUS
     tail_w: tuple                # len N, [n_elems_i]    word of TAIL
     n_entities: np.ndarray       # [N]
-    # Distributed counter (DC), per physical counter.
-    arrive_w: np.ndarray         # [C]
-    depart_w: np.ndarray         # [C]
-    C: int                       # number of physical counters
-    ctr_rank: np.ndarray         # [C] hosting rank of counter c
-    ctr_of_p: np.ndarray         # [P] counter index c(p)
+    # Distributed counter (DC), per physical counter slot. Slots may be
+    # padded past the C real counters (`pad_counters_to`) so layouts for
+    # different T_DC share one shape; `ctr_mask` marks the real slots.
+    arrive_w: np.ndarray         # [C_pad]
+    depart_w: np.ndarray         # [C_pad]
+    C: int                       # number of REAL physical counters
+    ctr_rank: np.ndarray         # [C_pad] hosting rank of counter c
+    ctr_mask: np.ndarray         # [C_pad] bool; False = padded slot
+    ctr_of_p: np.ndarray         # [P] counter index c(p), always < C
+    # Scratch region (baselines, DHT, CS payloads) — always the LAST
+    # `extra_words` words. Programs must address scratch through this
+    # table (via Env), never through baked absolute indices: W varies
+    # with counter padding, scratch slots do not.
+    scratch_w: np.ndarray        # [extra_words]
     # Entity helpers.
     ent_of_p: np.ndarray         # [N, P] entity id that p acts as at level i
     elem_of_p: np.ndarray        # [N, P] element id of p at level i (= e(p,i))
     init: np.ndarray             # [W] initial window contents
 
 
-def build_layout(m: Machine, T_DC: int = 1, extra_words: int = 0) -> Layout:
+def build_layout(m: Machine, T_DC: int = 1, extra_words: int = 0,
+                 pad_counters_to: int | None = None) -> Layout:
     """Assign word indices for an N-level lock over machine `m`.
 
     Level indexing here is 0-based with 0 = root (paper's level 1) and
     N-1 = leaf (paper's level N).
+
+    `pad_counters_to` pads the counter tables (and the window itself)
+    with dead masked slots up to the given slot count, so every T_DC of
+    one machine yields bitwise-identical array SHAPES — the property
+    that lets `Session.grid`/`sweep("T_DC", ...)` trace the whole T_DC
+    axis once. Padded slots are never addressed by the protocols
+    (`ctr_of_p < C` and the counter loops stop at the masked boundary),
+    so the simulated dynamics are unchanged.
     """
     N, P = m.N, m.P
     words = []  # (owner_rank, init_value)
@@ -84,12 +101,20 @@ def build_layout(m: Machine, T_DC: int = 1, extra_words: int = 0) -> Layout:
 
     c_ranks = counter_ranks(m, T_DC)
     C = len(c_ranks)
-    arrive_w = np.asarray([alloc(r, 0) for r in c_ranks], np.int32)
-    depart_w = np.asarray([alloc(r, 0) for r in c_ranks], np.int32)
+    C_pad = C if pad_counters_to is None else int(pad_counters_to)
+    if C_pad < C:
+        raise ValueError(
+            f"pad_counters_to={C_pad} < {C} real counters (T_DC={T_DC})")
+    pad_ranks = [int(c_ranks[-1])] * (C_pad - C)
+    arrive_w = np.asarray([alloc(r, 0) for r in c_ranks]
+                          + [alloc(r, 0) for r in pad_ranks], np.int32)
+    depart_w = np.asarray([alloc(r, 0) for r in c_ranks]
+                          + [alloc(r, 0) for r in pad_ranks], np.int32)
+    ctr_mask = np.arange(C_pad) < C
     ctr_of_p = np.minimum(counter_of_proc(m, T_DC), C - 1)
 
-    for k in range(extra_words):  # scratch (baselines, DHT, CS payloads)
-        alloc(k % P, 0)
+    scratch_w = np.asarray(       # scratch (baselines, DHT, CS payloads)
+        [alloc(k % P, 0) for k in range(extra_words)], np.int32)
 
     ent_of_p = np.zeros((N, P), dtype=np.int32)
     for i in range(N):
@@ -105,7 +130,8 @@ def build_layout(m: Machine, T_DC: int = 1, extra_words: int = 0) -> Layout:
         next_w=tuple(next_w), status_w=tuple(status_w), tail_w=tuple(tail_w),
         n_entities=np.asarray(n_entities, np.int32),
         arrive_w=arrive_w, depart_w=depart_w, C=C,
-        ctr_rank=np.asarray(c_ranks, np.int32), ctr_of_p=ctr_of_p,
+        ctr_rank=np.asarray(list(c_ranks) + pad_ranks, np.int32),
+        ctr_mask=ctr_mask, ctr_of_p=ctr_of_p, scratch_w=scratch_w,
         ent_of_p=ent_of_p, elem_of_p=m.proc_elem.copy(), init=init)
 
 

@@ -15,6 +15,12 @@ writer:
     counters back to READ mode -- exactly Listing 6/7 of the paper, with
     the same correctness argument (§4.1 Reader & Writer).
 
+Counter assignment is driven by the core topology mapping
+(`repro.core.topology.counter_of_proc`) — the same c(p) the simulated
+locks and the tuner use — so a tuned `LockSpec` applies to the serving
+path unchanged: `VersionedStore.from_spec(params, spec)` realizes the
+spec's (P, T_DC) point as a store.
+
 The control plane is host-side (threading) because weight swaps are a
 host-driven event; the data plane (params) stays in JAX arrays.
 """
@@ -23,6 +29,10 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from typing import Any, Callable, List
+
+import numpy as np
+
+from repro.core.topology import build_machine, counter_of_proc, counter_ranks
 
 
 class _Counter:
@@ -38,17 +48,33 @@ class _Counter:
 class VersionedStore:
     """MRSW parameter store with sharded reader counters."""
 
-    def __init__(self, params: Any, *, n_workers: int = 8, T_DC: int = 4):
+    def __init__(self, params: Any, *, n_workers: int = 8, T_DC: int = 4,
+                 machine=None):
         self._params = params
         self._version = 0
         self.T_DC = max(1, T_DC)
-        self.n_counters = max(1, -(-n_workers // self.T_DC))
+        self.n_workers = max(1, int(n_workers))
+        # c(p) from the core topology model — identical to the counter
+        # placement of the simulated locks (paper §3.2.1), not a
+        # re-derived ad-hoc formula.
+        m = machine if machine is not None else build_machine(
+            self.n_workers, ())
+        self.n_counters = len(counter_ranks(m, self.T_DC))
+        self._ctr_of_p = np.minimum(counter_of_proc(m, self.T_DC),
+                                    self.n_counters - 1)
         self._counters: List[_Counter] = [_Counter()
                                           for _ in range(self.n_counters)]
         self._swap_lock = threading.Lock()     # one writer at a time
 
+    @classmethod
+    def from_spec(cls, params: Any, spec) -> "VersionedStore":
+        """Realize a `LockSpec`'s (P, T_DC) point as a store: worker p
+        maps to the counter the spec's machine model gives c(p)."""
+        return cls(params, n_workers=spec.P, T_DC=spec.T_DC,
+                   machine=spec.machine())
+
     def counter_of(self, worker_id: int) -> int:
-        return (worker_id // self.T_DC) % self.n_counters
+        return int(self._ctr_of_p[worker_id % self.n_workers])
 
     @property
     def version(self) -> int:

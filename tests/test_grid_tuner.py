@@ -1,0 +1,191 @@
+"""Shape-stable T_DC sweeps, one-dispatch 3D grid scans, and the grid
+tuner.
+
+The contract under test: padding window layouts to a common counter-slot
+count (`build_layout(pad_counters_to=...)` + traced `env.ctr_mask`)
+makes every (T_DC) point of one machine shape-identical, so
+`Session.sweep("T_DC", ...)` and `Session.grid(...)` run as ONE jitted
+dispatch whose per-point results are bitwise-equal to fresh per-point
+sessions — including padded-counter points and the degenerate C=1
+corner.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import LockSpec, Session, TuneResult, metrics_at, tune
+
+MAX_EVENTS = 400_000
+
+SMALL_RW = LockSpec(kind="rma_rw", P=8, fanout=(2,), T_DC=2, T_L=(2, 2),
+                    T_R=8, writer_fraction=0.25)
+
+
+def assert_metrics_equal(got, want, ctx):
+    for name, g, w in zip(got._fields, got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (ctx, name)
+
+
+@pytest.fixture
+def build_counter(monkeypatch):
+    """Counts HierProgram._build invocations: one per trace of the
+    jitted sweep/grid function (vmap traces the point body once)."""
+    from repro.core.programs import hier
+    calls = {"n": 0}
+    orig = hier.HierProgram._build
+
+    def counting(self, env):
+        calls["n"] += 1
+        return orig(self, env)
+
+    monkeypatch.setattr(hier.HierProgram, "_build", counting)
+    return calls
+
+
+# ------------------------------------------------- shape-stable T_DC
+def test_sweep_tdc_bitwise_vs_fresh_sessions():
+    """T_DC points of one dispatch == fresh per-point sessions, across
+    heavy padding (T_DC=1: C=P) and the degenerate C=1 corner
+    (T_DC=P)."""
+    sess = Session(SMALL_RW, target_acq=3, max_events=MAX_EVENTS)
+    values, seeds = [1, 2, 8], [0, 1]
+    m = sess.sweep("T_DC", values, seeds=seeds)
+    assert m.violations.shape == (3, 2)
+    for k, d in enumerate(values):
+        ref = Session(SMALL_RW.replace(T_DC=d), target_acq=3,
+                      max_events=MAX_EVENTS).run_batch(seeds)
+        assert_metrics_equal(metrics_at(m, k), ref, d)
+
+
+@pytest.mark.parametrize("kind", ["fompi_spin", "fompi_rw"])
+def test_sweep_tdc_fompi_baselines_bitwise(kind):
+    """The baselines live in the scratch region, whose absolute word
+    indices SHIFT with counter padding: they must resolve their words
+    through env.scratch_w (a traced table), so a T_DC sweep from any
+    session is bitwise-equal to fresh per-point sessions — sweeping
+    up from a T_DC=1 session (shrinking the padded window) included."""
+    spec = LockSpec(kind=kind, P=8, T_DC=1, writer_fraction=None)
+    sess = Session(spec, target_acq=3, max_events=MAX_EVENTS)
+    values, seeds = [1, 2, 8], [0, 1]
+    m = sess.sweep("T_DC", values, seeds=seeds)
+    assert int(np.asarray(m.violations).sum()) == 0
+    for k, d in enumerate(values):
+        ref = Session(spec.replace(T_DC=d), target_acq=3,
+                      max_events=MAX_EVENTS).run_batch(seeds)
+        assert_metrics_equal(metrics_at(m, k), ref, (kind, d))
+
+
+def test_sweep_tdc_single_dispatch(build_counter):
+    sess = Session(SMALL_RW, target_acq=2, max_events=MAX_EVENTS)
+    before = build_counter["n"]
+    m = sess.sweep("T_DC", [1, 2, 4, 8], seeds=[0, 1])
+    assert build_counter["n"] - before == 1, \
+        "T_DC sweep regressed to per-point compiles"
+    assert int(np.asarray(m.violations).sum()) == 0
+    assert bool(np.asarray(m.completed).all())
+
+
+# --------------------------------------------------------- 3D grid
+def test_grid_bitwise_vs_fresh_sessions():
+    """Every lattice point of one grid dispatch == a fresh per-point
+    session, including a padded T_DC point and the C=1 corner."""
+    sess = Session(SMALL_RW, target_acq=2, max_events=MAX_EVENTS)
+    t_dc, t_l, t_r, seeds = [1, 8], [(2, 2), (4, 1)], [4, 16], [0, 1]
+    g = sess.grid(t_dc, t_l, t_r, seeds=seeds)
+    assert g.violations.shape == (2, 2, 2, 2)
+    assert int(np.asarray(g.violations).sum()) == 0
+    for di, d in enumerate(t_dc):
+        for li, l in enumerate(t_l):
+            for ri, r in enumerate(t_r):
+                ref = Session(
+                    SMALL_RW.replace(T_DC=d, T_L=l, T_R=r),
+                    target_acq=2, max_events=MAX_EVENTS).run_batch(seeds)
+                assert_metrics_equal(metrics_at(g, di, li, ri), ref,
+                                     (d, l, r))
+
+
+def test_grid_single_dispatch(build_counter):
+    sess = Session(SMALL_RW, target_acq=2, max_events=MAX_EVENTS)
+    before = build_counter["n"]
+    g = sess.grid([1, 2], [(2, 2), (2, 4)], [4, 16], seeds=[0, 1])
+    assert build_counter["n"] - before == 1, \
+        "grid regressed to per-point compiles"
+    assert g.violations.shape == (2, 2, 2, 2)
+
+
+def test_grid_validates_points_and_axes():
+    sess = Session(SMALL_RW, target_acq=2, max_events=MAX_EVENTS)
+    with pytest.raises(ValueError, match="non-empty"):
+        sess.grid([], [(2, 2)], [4])
+    with pytest.raises(ValueError, match="T_DC"):
+        sess.grid([0], [(2, 2)], [4])
+    with pytest.raises(ValueError, match="T_L"):
+        sess.grid([1], [(2, 2, 2)], [4])
+
+
+# ----------------------------------------------------------- tuner
+def test_tuner_emits_reproducible_winning_spec():
+    res = tune(SMALL_RW, t_dc=[1, 2, 8], t_l=[(2, 2), (4, 1)],
+               t_r=[4, 16], seeds=(0, 1), refine_rounds=1,
+               target_acq=2, max_events=MAX_EVENTS)
+    # The emitted spec is a plain LockSpec that round-trips exactly.
+    assert LockSpec.from_dict(res.to_dict()["spec"]) == res.spec
+    back = TuneResult.from_json(res.to_json())
+    assert back.spec == res.spec
+    assert back.throughput_per_seed == res.throughput_per_seed
+    # The reported throughput reproduces bitwise on a fresh session.
+    fresh = Session(res.spec, target_acq=2, max_events=MAX_EVENTS)
+    m = fresh.run_batch(res.seeds)
+    assert int(np.asarray(m.violations).sum()) == 0
+    got = tuple(float(x) for x in np.asarray(m.throughput))
+    assert got == res.throughput_per_seed
+    assert res.throughput == pytest.approx(float(np.mean(got)))
+    # Refinement really zoomed: round 2 lattice sits around the
+    # incumbent, and the final winner is the best point ever seen.
+    assert len(res.rounds) == 2
+    assert res.score >= res.rounds[0]["best_score"]
+
+
+def test_tuner_latency_objective_and_bad_objective():
+    res = tune(SMALL_RW, t_dc=[2], t_l=[(2, 2)], t_r=[8, 16],
+               seeds=(0,), refine_rounds=0, target_acq=2,
+               max_events=MAX_EVENTS, objective="latency")
+    assert res.objective == "latency"
+    assert res.score == -res.latency_us
+    with pytest.raises(ValueError, match="objective"):
+        tune(SMALL_RW, objective="vibes")
+
+
+# ------------------------------------------- bounded handler cache
+def test_memoized_build_cache_is_bounded():
+    from repro.core import engine
+    from repro.core.programs import hier
+    prog = hier.rma_rw()
+    sess = Session(SMALL_RW, target_acq=2, max_events=MAX_EVENTS)
+    envs = [dataclasses.replace(sess.env, T_R=i + 1) for i in range(12)]
+    for e in envs:
+        prog.build(e)
+    assert len(prog._cache) <= engine.MEMO_MAX_ENTRIES
+    # Most recent envs are retained: re-building the last one is a hit
+    # (same handlers object back), the first one was evicted.
+    last = prog.build(envs[-1])
+    assert prog.build(envs[-1]) is last
+    assert id(envs[0]) not in prog._cache
+
+
+# ------------------------------------- serving store from a LockSpec
+def test_versioned_store_from_spec_uses_core_topology():
+    from repro.core.topology import counter_of_proc
+    from repro.serve import VersionedStore
+    spec = LockSpec(kind="rma_rw", P=64, fanout=(4,), T_DC=16,
+                    T_L=(4, 4), T_R=64, writer_fraction=0.02)
+    store = VersionedStore.from_spec({"w": 0}, spec)
+    assert store.n_counters == 4
+    c = np.minimum(counter_of_proc(spec.machine(), spec.T_DC),
+                   store.n_counters - 1)
+    for wid in range(spec.P):
+        assert store.counter_of(wid) == int(c[wid])
+    assert store.swap({"w": 1}) == 1
+    with store.reader_view(63) as (params, ver):
+        assert ver == 1 and params["w"] == 1

@@ -149,7 +149,12 @@ def test_sweep_writer_fraction_changes_roles():
         assert np.array_equal(np.asarray(got), np.asarray(want)), name
 
 
-def test_sweep_tdc_relayouts_per_point():
+def test_sweep_tdc_is_a_dynamic_axis():
+    """T_DC joins the single-dispatch axes: layouts are padded to a
+    common counter-slot count so the whole axis traces once (bitwise
+    equivalence + compile counting live in test_grid_tuner.py)."""
+    from repro.core import DYNAMIC_AXES
+    assert "T_DC" in DYNAMIC_AXES
     sess = Session(SMALL_RW, target_acq=2, max_events=MAX_EVENTS)
     m = sess.sweep("T_DC", [1, 2, 4], seeds=[0])
     assert m.violations.shape == (3, 1)

@@ -59,6 +59,34 @@ def test_window_layout_ownership():
     assert lay.owner[lay.tail_w[0][0]] == 0
 
 
+def test_window_layout_counter_padding_is_shape_stable():
+    """`pad_counters_to` gives every T_DC of one machine bitwise-
+    identical array shapes: same W, same counter-table widths, masked
+    dead slots, and untouched real-word placement."""
+    m = build_machine(8, (2,))
+    C_max = len(counter_ranks(m, 1))                     # T_DC=1: C=P=8
+    lays = {d: build_layout(m, d, extra_words=4, pad_counters_to=C_max)
+            for d in (1, 2, 8)}
+    assert len({lay.W for lay in lays.values()}) == 1
+    for d, lay in lays.items():
+        assert lay.arrive_w.shape == lay.depart_w.shape \
+            == lay.ctr_rank.shape == lay.ctr_mask.shape == (C_max,)
+        assert lay.C == len(counter_ranks(m, d))
+        assert lay.ctr_mask.sum() == lay.C
+        assert not lay.ctr_mask[lay.C:].any()
+        assert (lay.ctr_of_p < lay.C).all()              # never a pad slot
+    # Real counter words keep the exact owners of the unpadded layout,
+    # and the scratch words stay the last `extra_words` of the window.
+    unpadded = build_layout(m, 2, extra_words=4)
+    padded = lays[2]
+    np.testing.assert_array_equal(
+        unpadded.owner[unpadded.arrive_w[:2]],
+        padded.owner[padded.arrive_w[:2]])
+    np.testing.assert_array_equal(unpadded.owner[-4:], padded.owner[-4:])
+    with pytest.raises(ValueError, match="pad_counters_to"):
+        build_layout(m, 2, pad_counters_to=1)            # < real C
+
+
 @settings(max_examples=10, deadline=None)
 @given(n=st.integers(1, 200), nb=st.sampled_from([2, 4, 8]),
        TB=st.sampled_from([16, 64]), seed=st.integers(0, 99))
