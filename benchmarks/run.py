@@ -22,9 +22,23 @@ RESULTS = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "results", "bench"))
 
 
+def coerce_scalars(rows):
+    """Convert numpy scalars to plain Python values.
+
+    `isinstance(x, float)` is False for np.float32/np.float64 scalars,
+    so without this they fall into show()'s string branch and print as
+    `np.float32(...)` noise (and write_csv emits the same repr).
+    """
+    import numpy as np
+
+    return [{k: (v.item() if isinstance(v, np.generic) else v)
+             for k, v in r.items()} for r in rows]
+
+
 def write_csv(name, rows):
     if not rows:
         return
+    rows = coerce_scalars(rows)
     keys = sorted({k for r in rows for k in r})
     with open(os.path.join(RESULTS, name + ".csv"), "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=keys)
@@ -33,6 +47,7 @@ def write_csv(name, rows):
 
 
 def show(title, rows, cols):
+    rows = coerce_scalars(rows)
     print(f"\n== {title} ==")
     hdr = " ".join(f"{c:>16s}" for c in cols)
     print(hdr)
@@ -56,7 +71,8 @@ def run_tuner(args) -> str:
                seeds=(0, 1) if args.quick else tuple(range(4)),
                refine_rounds=0 if args.quick else (2 if args.full else 1),
                target_acq=2 if args.quick else 4,
-               max_events=400_000 if args.quick else 2_000_000)
+               max_events=400_000 if args.quick else 2_000_000,
+               devices=args.devices)
     # The emitted spec must survive serialization exactly — it is the
     # deployment artifact.
     assert LockSpec.from_dict(res.to_dict()["spec"]) == res.spec
@@ -67,7 +83,8 @@ def run_tuner(args) -> str:
     print(f"  winner: T_DC={res.spec.T_DC} T_L={res.spec.T_L} "
           f"T_R={res.spec.T_R}")
     print(f"  {res.objective}: {res.score:.4g} "
-          f"({res.n_points} lattice points, {len(res.rounds)} rounds)")
+          f"({res.n_points} lattice points, {len(res.rounds)} rounds, "
+          f"{res.n_devices} device(s))")
     print(f"  report: {path}")
     return path
 
@@ -84,6 +101,11 @@ def main(argv=None):
     ap.add_argument("--tune", action="store_true",
                     help="run the 3D grid auto-tuner and write "
                          "results/bench/tuned_spec.json")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="shard --tune and the threshold-sweep sections "
+                         "over the first N local devices (force host "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
     os.makedirs(RESULTS, exist_ok=True)
 
@@ -121,19 +143,20 @@ def main(argv=None):
         show("RW vs SOTA (Fig. 5)", rows,
              ["kind", "F_W", "P", "throughput_per_s"])
     if want("tdc"):
-        rows = thresholds.sweep_tdc(ps=ps[:2] if args.quick else ps)
+        rows = thresholds.sweep_tdc(ps=ps[:2] if args.quick else ps,
+                                    devices=args.devices)
         write_csv("tdc", rows)
         show("T_DC sweep (Fig. 4a)", rows,
              ["T_DC", "P", "throughput_per_s", "latency_us"])
     if want("tl"):
-        rows = thresholds.sweep_tl_product()
-        rows += thresholds.sweep_tl_split()
+        rows = thresholds.sweep_tl_product(devices=args.devices)
+        rows += thresholds.sweep_tl_split(devices=args.devices)
         write_csv("tl", rows)
         show("T_L sweeps (Fig. 4b-d)", rows,
              ["bench", "T_L", "throughput_per_s", "latency_us",
               "locality"])
     if want("tr"):
-        rows = thresholds.sweep_tr()
+        rows = thresholds.sweep_tr(devices=args.devices)
         write_csv("tr", rows)
         show("T_R sweep (Fig. 4e-f)", rows,
              ["T_R", "F_W", "throughput_per_s"])

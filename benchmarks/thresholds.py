@@ -8,7 +8,16 @@ Each figure is a `Session.sweep` call running as ONE jitted dispatch
 over (points x seeds) — including T_DC: window layouts are padded to a
 common counter-slot count (shape-stable), so counter placement is a
 traced value and the whole axis compiles once. `Session.grid` composes
-all three axes for the tuner (`benchmarks.run --tune`).
+all three axes for the tuner (`benchmarks.run --tune`). Every sweep
+takes `devices=` (int count or device list) to shard the flattened
+(points x seeds) batch across local devices — results are bitwise
+those of the single-device dispatch.
+
+Expectation baseline: makespan (and so every throughput/latency figure
+derived from it) is the *finish* time of the last instruction
+(`SimState.t_finish`), not the start time of the last event — numbers
+re-baselined accordingly; rows still assert only the safety/liveness
+invariants (violations == 0, completed), never absolute values.
 """
 from __future__ import annotations
 
@@ -16,14 +25,15 @@ from benchmarks.locks import PROCS_PER_NODE, make_session, metrics_row
 from repro.core import LockSpec, Session, metrics_at
 
 
-def sweep_tdc(ps=(32, 64, 256), tdcs=(4, 16, 32, 64), fw=0.002):
+def sweep_tdc(ps=(32, 64, 256), tdcs=(4, 16, 32, 64), fw=0.002,
+              devices=None):
     out = []
     for P in ps:
         values = [t for t in tdcs if t <= P]
         if not values:
             continue
         sess = make_session("rma_rw", P, writer_fraction=fw)
-        m = sess.sweep("T_DC", values)
+        m = sess.sweep("T_DC", values, devices=devices)
         for i, t in enumerate(values):
             r = metrics_row(metrics_at(m, i, 0), bench="ecsb",
                             kind="rma_rw", P=P)
@@ -40,8 +50,8 @@ def _tl_session(P, fw):
     return Session(spec, target_acq=4, cs_kind=0)
 
 
-def _tl_rows(bench, P, sess, points):
-    m = sess.sweep("T_L", points)
+def _tl_rows(bench, P, sess, points, devices=None):
+    m = sess.sweep("T_L", points, devices=devices)
     out = []
     for i, (root, leaf) in enumerate(points):
         mi = metrics_at(m, i, 0)
@@ -54,26 +64,31 @@ def _tl_rows(bench, P, sess, points):
     return out
 
 
-def sweep_tl_product(P=64, products=(16, 100, 1000), fw=0.25):
+def sweep_tl_product(P=64, products=(16, 100, 1000), fw=0.25,
+                     devices=None):
     """Fig 4b: total writer batch T_W = prod(T_L) before reader handover."""
     points = []
     for prod in products:
         leaf = max(int(prod ** 0.5), 1)
         root = max(prod // leaf, 1)
         points.append((root, leaf))
-    return _tl_rows("tl_product", P, _tl_session(P, fw), points)
+    return _tl_rows("tl_product", P, _tl_session(P, fw), points,
+                    devices=devices)
 
 
-def sweep_tl_split(P=64, splits=((100, 10), (40, 25), (20, 50)), fw=0.25):
+def sweep_tl_split(P=64, splits=((100, 10), (40, 25), (20, 50)), fw=0.25,
+                   devices=None):
     """Fig 4c/d: fixed product, varying the per-level split (root, leaf)."""
-    return _tl_rows("tl_split", P, _tl_session(P, fw), list(splits))
+    return _tl_rows("tl_split", P, _tl_session(P, fw), list(splits),
+                    devices=devices)
 
 
-def sweep_tr(P=64, trs=(64, 512, 4096), fws=(0.002, 0.02, 0.05)):
+def sweep_tr(P=64, trs=(64, 512, 4096), fws=(0.002, 0.02, 0.05),
+             devices=None):
     out = []
     for fw in fws:
         sess = make_session("rma_rw", P, writer_fraction=fw)
-        m = sess.sweep("T_R", trs)
+        m = sess.sweep("T_R", trs, devices=devices)
         for i, tr in enumerate(trs):
             r = metrics_row(metrics_at(m, i, 0), bench="ecsb",
                             kind="rma_rw", P=P)

@@ -11,4 +11,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python -m benchmarks.run --quick --only lb
 python scripts/grid_smoke.py
+# Sharded-grid smoke on 8 forced host devices: bitwise equivalence to
+# the single-device dispatch + single-trace assert (quick budget).
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python scripts/grid_smoke.py --devices 8
 python -m benchmarks.run --tune --quick

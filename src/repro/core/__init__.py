@@ -17,7 +17,8 @@ layers:
 `repro.core.api` keeps the deprecated per-kind classes as shims.
 """
 from repro.core.engine import Metrics
-from repro.core.session import DYNAMIC_AXES, SWEEP_AXES, Session, metrics_at
+from repro.core.session import (DYNAMIC_AXES, SWEEP_AXES, Session,
+                                metrics_at, resolve_devices)
 from repro.core.spec import (EXTRA_WORDS, PROCS_PER_NODE, LockKind,
                              LockSpec, get_kind, register_kind,
                              registered_kinds, writer_mask)
@@ -26,6 +27,6 @@ from repro.core.tuner import TuneResult, tune
 __all__ = [
     "DYNAMIC_AXES", "EXTRA_WORDS", "LockKind", "LockSpec", "Metrics",
     "PROCS_PER_NODE", "SWEEP_AXES", "Session", "TuneResult", "get_kind",
-    "metrics_at", "register_kind", "registered_kinds", "tune",
-    "writer_mask",
+    "metrics_at", "register_kind", "registered_kinds", "resolve_devices",
+    "tune", "writer_mask",
 ]

@@ -25,10 +25,21 @@ jitted simulator once, and then offers three execution shapes:
     `repro.core.tuner` auto-tuner and of multi-device sharded
     exploration.
 
+Multi-device sharding: every execution shape takes a `devices=` knob
+(constructor default + per-call override). With devices given, the
+flattened (lattice points × seeds) batch is padded to a device
+multiple with dead entries, sharded over a 1D mesh
+(`launch.mesh.make_batch_mesh`) via `shard_map` (pmap on very old
+jax), and the Metrics are unpadded back — per-entry results are
+bitwise-equal to the single-device dispatch because entries never
+interact (the vmapped `lax.while_loop` keeps each lane's trajectory
+independent). `devices=None` (the default) keeps the classic
+single-device dispatch.
+
 Seed-level caching: the jitted program is cached per (handlers,
 max_events) by JAX, and handlers are cached per environment by the
 program, so repeated `run`/`run_batch` calls on one Session never
-recompile.
+recompile. Sharded dispatch functions are cached per device tuple.
 """
 from __future__ import annotations
 
@@ -44,6 +55,20 @@ from repro.core.spec import EXTRA_WORDS, LockSpec
 from repro.core.topology import counter_ranks
 from repro.core.window import build_layout
 
+# shard_map moved out of jax.experimental over jax's lifetime; prefer
+# the public name, fall back to experimental, else pmap (see
+# `Session._build_shard_fn`).
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    try:
+        from jax.experimental.shard_map import shard_map as _shard_map
+    except ImportError:                           # pragma: no cover
+        _shard_map = None
+
+# Sentinel for "devices not passed": per-call `devices=None` forces the
+# single-device path even on a Session constructed with devices.
+_UNSET = object()
+
 # Axes of `sweep`. ALL axes share one compiled program: T_L / T_R /
 # writer_fraction are plain traced values, and T_DC points are padded to
 # a common counter-slot count so even counter placement is a traced
@@ -56,6 +81,30 @@ def metrics_at(m: engine.Metrics, *index) -> engine.Metrics:
     """Select one element from stacked Metrics (e.g. `metrics_at(m, k, s)`
     for sweep output, `metrics_at(m, s)` for run_batch output)."""
     return engine.Metrics(*(leaf[index] for leaf in m))
+
+
+def resolve_devices(devices):
+    """Normalize a `devices=` argument to a tuple of jax devices.
+
+    Accepts None (single-device classic dispatch — returns None), an
+    int N (first N local devices), or an explicit device sequence
+    (e.g. `jax.local_devices()`).
+    """
+    if devices is None:
+        return None
+    if isinstance(devices, int):
+        local = jax.local_devices()
+        if not 1 <= devices <= len(local):
+            raise ValueError(
+                f"devices={devices} but this host has {len(local)} local "
+                f"device(s); force more with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+        return tuple(local[:devices])
+    devices = tuple(devices)
+    if not devices:
+        raise ValueError("devices must be None, an int >= 1, or a "
+                         "non-empty device sequence")
+    return devices
 
 
 def _tl_dyn(spec: LockSpec) -> dict:
@@ -77,8 +126,9 @@ class Session:
     def __init__(self, spec: LockSpec, *, target_acq: int = 8,
                  cs_kind: int = 0, think: bool = False,
                  max_events: int = 2_000_000,
-                 extra_words: int = EXTRA_WORDS):
+                 extra_words: int = EXTRA_WORDS, devices=None):
         self.spec = spec
+        self.devices = resolve_devices(devices)
         self.target_acq = int(target_acq)
         self.cs_kind = int(cs_kind)
         self.think = bool(think)
@@ -97,6 +147,13 @@ class Session:
             self.env, self.layout, self.program.init_pc(self.env),
             self.program.n_regs, self.program.init_regs(self.env))
         self._sweep_fn = None
+        self._shard_fns = {}      # devices tuple -> jitted sharded fn
+
+    def _devices(self, devices):
+        """Per-call `devices=` override (the constructor's value when
+        not passed; explicit None forces the single-device path)."""
+        return (self.devices if devices is _UNSET
+                else resolve_devices(devices))
 
     # ------------------------------------------------------ execution
     def run_state(self, seed: int = 0) -> engine.SimState:
@@ -108,12 +165,20 @@ class Session:
     def run(self, seed: int = 0) -> engine.Metrics:
         return engine.summarize(self.run_state(seed))
 
-    def run_batch(self, seeds) -> engine.Metrics:
+    def run_batch(self, seeds, *, devices=_UNSET) -> engine.Metrics:
         """Execute all seeds in one jitted dispatch; Metrics leaves gain
-        a leading [len(seeds)] axis."""
-        return engine._run_batch(self.handlers, self.max_events,
-                                 self.state0,
-                                 jnp.asarray(seeds, jnp.int32))
+        a leading [len(seeds)] axis. With `devices`, the seed batch is
+        sharded across them (padded to a device multiple, unpadded in
+        the returned Metrics)."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        devices = self._devices(devices)
+        if devices is None:
+            return engine._run_batch(self.handlers, self.max_events,
+                                     self.state0, seeds)
+        # One-point "lattice": shard the flattened (1 x S) batch.
+        st0 = jax.tree.map(lambda x: x[None], self.state0)
+        m = self._dispatch({}, st0, seeds, devices)
+        return metrics_at(m, 0)
 
     # --------------------------------------------------------- sweeps
     def specs_along(self, axis: str, values) -> list:
@@ -123,11 +188,13 @@ class Session:
                              f"got {axis!r}")
         return [self.spec.replace(**{axis: v}) for v in values]
 
-    def sweep(self, axis: str, values, *, seeds=(0,)) -> engine.Metrics:
+    def sweep(self, axis: str, values, *, seeds=(0,),
+              devices=_UNSET) -> engine.Metrics:
         """Scan one parameter axis under a batch of seeds — ONE jitted
         dispatch for every axis, including T_DC (points are padded to a
         common counter-slot count, so counter placement is a traced
-        value rather than a shape).
+        value rather than a shape). With `devices`, the flattened
+        (points × seeds) batch is sharded across them.
 
         Returns stacked Metrics with leading axes [len(values),
         len(seeds)]; index with `metrics_at(m, k, s)`.
@@ -135,9 +202,10 @@ class Session:
         specs = self.specs_along(axis, values)
         seeds = jnp.asarray(seeds, jnp.int32)
         dyn, st0 = self._sweep_points(axis, specs)
-        return self._dispatch(dyn, st0, seeds)
+        return self._dispatch(dyn, st0, seeds, self._devices(devices))
 
-    def grid(self, t_dc, t_l, t_r, *, seeds=(0,)) -> engine.Metrics:
+    def grid(self, t_dc, t_l, t_r, *, seeds=(0,),
+             devices=_UNSET) -> engine.Metrics:
         """Scan the paper's full 3D (T_DC, T_L, T_R) lattice under a
         batch of seeds as ONE jitted dispatch.
 
@@ -147,7 +215,11 @@ class Session:
         [len(t_dc), len(t_l), len(t_r), len(seeds)]; index with
         `metrics_at(m, d, l, r, s)`. Each lattice point is bitwise-equal
         to a fresh per-point `Session.run_batch` — padding only adds
-        dead masked counter slots, never dynamics.
+        dead masked counter slots, never dynamics. With `devices` (a
+        device list or an int count; defaults to the constructor's),
+        the flattened (lattice points × seeds) batch is data-parallel
+        across devices, still one compile, still bitwise-equal per
+        point.
         """
         t_dc = [int(v) for v in t_dc]
         t_l = [v if v is None else tuple(int(x) for x in v) for v in t_l]
@@ -172,7 +244,7 @@ class Session:
                     states.append(st_d)
         dyn = {k: jnp.stack([dd[k] for dd in dyns]) for k in dyns[0]}
         st0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-        m = self._dispatch(dyn, st0, seeds)
+        m = self._dispatch(dyn, st0, seeds, self._devices(devices))
         shape = (len(t_dc), len(t_l), len(t_r))
         return engine.Metrics(
             *(leaf.reshape(shape + leaf.shape[1:]) for leaf in m))
@@ -219,10 +291,96 @@ class Session:
         st0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
         return dyn, st0
 
-    def _dispatch(self, dyn, st0, seeds) -> engine.Metrics:
-        if self._sweep_fn is None:
-            self._sweep_fn = self._build_sweep_fn()
-        return self._sweep_fn(dyn, st0, seeds)
+    def _dispatch(self, dyn, st0, seeds, devices=None) -> engine.Metrics:
+        """Run the stacked points × seeds batch; Metrics leaves come
+        back with leading [K, S] axes. `devices=None` is the classic
+        single-device dispatch; otherwise the flattened (K × S) batch
+        is sharded across the device tuple."""
+        if devices is None:
+            if self._sweep_fn is None:
+                self._sweep_fn = self._build_sweep_fn()
+            return self._sweep_fn(dyn, st0, seeds)
+        return self._dispatch_sharded(dyn, st0, seeds, devices)
+
+    def _dispatch_sharded(self, dyn, st0, seeds, devices) -> engine.Metrics:
+        """Flatten (points × seeds), pad to a device multiple with dead
+        entries, shard, and unpad the Metrics.
+
+        Entries never interact (independent lanes of one vmap), so the
+        pad entries — replays of (point 0, seed 0) — cannot perturb live
+        entries, and per-entry results are bitwise-equal to the
+        single-device dispatch.
+        """
+        K = jax.tree.leaves(st0)[0].shape[0]
+        S = seeds.shape[0]
+        B = K * S
+        D = len(devices)
+        idx = jnp.repeat(jnp.arange(K, dtype=jnp.int32), S)
+        sds = jnp.tile(seeds, K)
+        pad = (-B) % D
+        if pad:
+            idx = jnp.concatenate([idx, jnp.zeros(pad, jnp.int32)])
+            sds = jnp.concatenate([sds, jnp.broadcast_to(seeds[:1], (pad,))])
+        fn = self._shard_fns.get(devices)
+        if fn is None:
+            fn = self._shard_fns[devices] = self._build_shard_fn(devices)
+        m = fn(dyn, st0, idx, sds)
+        return engine.Metrics(
+            *(leaf[:B].reshape((K, S) + leaf.shape[1:]) for leaf in m))
+
+    def _point_entry(self, dyn, st0, i, seed):
+        """One flattened (point, seed) entry: realize point i's env and
+        run seed's schedule to completion (traceable)."""
+        env_k = dataclasses.replace(
+            self.env, **jax.tree.map(lambda x: x[i], dyn))
+        st_k = jax.tree.map(lambda x: x[i], st0)
+        # _build, not build: the memoizing build() would retain this
+        # traced env (and its tracers) past the trace.
+        handlers = self.program._build(env_k)
+        final = engine.step_loop(handlers, self.max_events, st_k, seed)
+        return engine.summarize(final)
+
+    def _build_shard_fn(self, devices):
+        """Jitted sharded dispatch over a 1D mesh of `devices`: each
+        device runs its contiguous chunk of the flattened batch through
+        one vmapped entry body (ONE trace — the point program is built
+        once for the whole mesh)."""
+        from repro.launch.mesh import make_batch_mesh
+
+        mesh = make_batch_mesh(devices)
+
+        def tile(dyn, st0, idx, seeds):
+            return jax.vmap(functools.partial(
+                self._point_entry, dyn, st0))(idx, seeds)
+
+        if _shard_map is not None:
+            import inspect
+
+            P = jax.sharding.PartitionSpec
+            # Disable the replication check: jax<0.5 has no replication
+            # rule for while_loop, and every output is explicitly
+            # batch-sharded so it adds nothing. The kwarg was renamed
+            # check_rep -> check_vma when shard_map went public.
+            params = inspect.signature(_shard_map).parameters
+            check = {k: False for k in ("check_rep", "check_vma")
+                     if k in params}
+            return jax.jit(_shard_map(
+                tile, mesh=mesh,
+                in_specs=(P(), P(), P("batch"), P("batch")),
+                out_specs=P("batch"), **check))
+
+        # pmap fallback (no shard_map in this jax): same tile body over
+        # explicit [D, B/D] chunks; dyn/st0 broadcast to every device.
+        D = len(devices)
+        pfn = jax.pmap(tile, in_axes=(None, None, 0, 0),
+                       devices=list(devices))
+
+        def run(dyn, st0, idx, seeds):
+            m = pfn(dyn, st0, idx.reshape(D, -1), seeds.reshape(D, -1))
+            return engine.Metrics(
+                *(leaf.reshape((-1,) + leaf.shape[2:]) for leaf in m))
+
+        return run
 
     def _build_sweep_fn(self):
         program, env, max_events = self.program, self.env, self.max_events

@@ -150,8 +150,12 @@ class LockSpec:
             raise ValueError(
                 f"P={self.P} not divisible by leaf element count {leafs} "
                 f"(fanout={fanout})")
-        if self.T_DC < 1:
-            raise ValueError(f"T_DC must be >= 1, got {self.T_DC}")
+        if not 1 <= self.T_DC <= self.P:
+            # T_DC > P would silently degrade to a single counter in
+            # counter_ranks — reject it at the single validation point
+            # every entry path (grid, sweep, tuner, serving) shares.
+            raise ValueError(
+                f"T_DC must be in [1, P={self.P}], got {self.T_DC}")
         if self.T_R < 1:
             raise ValueError(f"T_R must be >= 1, got {self.T_R}")
         T_L = self.T_L

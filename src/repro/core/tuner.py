@@ -10,7 +10,10 @@ winner, and emit the winning `LockSpec` as JSON for deployment.
 
 Every round is ONE `Session.grid` dispatch (shape-stable padded
 window layouts make T_DC a traced axis), so a tune is a handful of
-compiles total — not one per lattice point. Scores are averaged over a
+compiles total — not one per lattice point. With `devices=` the grid
+dispatches shard the flattened (lattice points × seeds) batch across
+local devices — scores are bitwise those of a single-device tune
+(`TuneResult.n_devices` records the count). Scores are averaged over a
 seed batch of schedule interleavings; any point that violates mutual
 exclusion or fails to complete under any seed is disqualified outright.
 
@@ -50,6 +53,7 @@ class TuneResult:
     throughput_per_seed: tuple    # bitwise-reproducible per-seed values
     n_points: int                 # distinct lattice points evaluated
     rounds: tuple                 # per-round lattices + incumbents
+    n_devices: int = 1            # devices the grid dispatches ran on
 
     def to_dict(self) -> dict:
         return {
@@ -62,6 +66,7 @@ class TuneResult:
             "throughput_per_seed": list(self.throughput_per_seed),
             "n_points": self.n_points,
             "rounds": [dict(r) for r in self.rounds],
+            "n_devices": self.n_devices,
         }
 
     def to_json(self) -> str:
@@ -76,7 +81,8 @@ class TuneResult:
             latency_us=d["latency_us"], seeds=tuple(d["seeds"]),
             throughput_per_seed=tuple(d["throughput_per_seed"]),
             n_points=d["n_points"],
-            rounds=tuple(_round_from_dict(r) for r in d["rounds"]))
+            rounds=tuple(_round_from_dict(r) for r in d["rounds"]),
+            n_devices=d.get("n_devices", 1))
 
 
 def _round_from_dict(r: dict) -> dict:
@@ -108,6 +114,27 @@ def default_lattice(spec: LockSpec) -> dict:
                for leaf in sorted({1, 8, 64, base[-1]})]
     t_r = [16, 256, 4096]
     return {"t_dc": t_dc, "t_l": t_l, "t_r": t_r}
+
+
+def _validate_lattice(lattice: dict, P: int) -> None:
+    """Reject nonsense axis values up front with an error naming the
+    offending axis — out-of-range entries would otherwise reach
+    `counter_ranks` / the threshold encoding and produce silently
+    meaningless lattices."""
+    for d in lattice["t_dc"]:
+        if not 1 <= d <= P:
+            raise ValueError(
+                f"t_dc axis: T_DC={d} out of range [1, P={P}]")
+    for l in lattice["t_l"]:
+        if l is None:
+            continue
+        if not l or any(int(x) < 1 for x in l):
+            raise ValueError(
+                f"t_l axis: T_L={l} — per-level thresholds must be a "
+                f"non-empty tuple of entries >= 1 (or None)")
+    for r in lattice["t_r"]:
+        if r < 1:
+            raise ValueError(f"t_r axis: T_R={r} must be >= 1")
 
 
 def _geo_mid(a: int, b: int) -> int:
@@ -143,13 +170,18 @@ def tune(spec: LockSpec, *, t_dc=None, t_l=None, t_r=None,
          seeds=(0, 1), refine_rounds: int = 1, target_acq: int = 4,
          cs_kind: int = 0, think: bool = False,
          max_events: int = 2_000_000,
-         objective: str = "throughput") -> TuneResult:
+         objective: str = "throughput", devices=None) -> TuneResult:
     """Search the (T_DC, T_L, T_R) space for the workload described by
     (spec roles + cs_kind/think), one `Session.grid` dispatch per round.
 
     Axis candidates default to `default_lattice(spec)`; pass explicit
-    lists to pin or narrow an axis. `refine_rounds` extra rounds zoom
-    geometrically around the incumbent. Returns the best point seen.
+    lists to pin or narrow an axis (entries are validated up front —
+    `t_dc` must lie in [1, P], `t_l` thresholds and `t_r` must be
+    >= 1). `refine_rounds` extra rounds zoom geometrically around the
+    incumbent. `devices` (an int count or a device list) shards every
+    grid dispatch across devices — scores are unchanged (per-point
+    results are bitwise-equal to the single-device dispatch), only
+    exploration wall-time drops. Returns the best point seen.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"objective must be one of {OBJECTIVES}, "
@@ -161,10 +193,11 @@ def tune(spec: LockSpec, *, t_dc=None, t_l=None, t_r=None,
         lattice["t_l"] = [None if v is None else tuple(v) for v in t_l]
     if t_r is not None:
         lattice["t_r"] = sorted({int(v) for v in t_r})
+    _validate_lattice(lattice, spec.P)
     seeds = tuple(int(s) for s in seeds)
 
     sess = Session(spec, target_acq=target_acq, cs_kind=cs_kind,
-                   think=think, max_events=max_events)
+                   think=think, max_events=max_events, devices=devices)
     evaluated: dict = {}          # (d, l, r) -> (score, tput, lat, per_seed)
     rounds = []
     for rnd in range(refine_rounds + 1):
@@ -208,4 +241,5 @@ def tune(spec: LockSpec, *, t_dc=None, t_l=None, t_r=None,
         spec=spec.replace(T_DC=d, T_L=l, T_R=r), objective=objective,
         score=b_score, throughput=b_tput, latency_us=b_lat, seeds=seeds,
         throughput_per_seed=b_per_seed, n_points=len(evaluated),
-        rounds=tuple(rounds))
+        rounds=tuple(rounds),
+        n_devices=1 if sess.devices is None else len(sess.devices))

@@ -25,3 +25,23 @@ def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many devices the host actually has
     (tests / examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_batch_mesh(devices=None):
+    """1D data-parallel mesh over an explicit device list — the lock
+    substrate's exploration axis (`Session.grid/sweep/run_batch` shard
+    the flattened (lattice points x seeds) batch over it).
+
+    `devices` is a sequence of jax devices (default: all local devices).
+    Distinct from `make_host_mesh`: exploration batches shard over ONE
+    axis of explicitly chosen devices, so the same helper serves both a
+    real multi-chip host and an `--xla_force_host_platform_device_count`
+    forced-CPU test topology.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = list(jax.local_devices() if devices is None else devices)
+    if not devices:
+        raise ValueError("make_batch_mesh needs at least one device")
+    return Mesh(np.array(devices), ("batch",))
