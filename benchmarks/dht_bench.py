@@ -79,7 +79,6 @@ def bench_dht(ps=(16, 64), fws=(0.0, 0.02, 0.05, 0.20), target_acq=4):
 def bench_batched_table(n_keys=512, nb=16, TB=256, iters=20):
     """Wall-clock of the Pallas-kernel table vs a python-loop oracle."""
     from repro.dht import BatchedDHT
-    from repro.kernels import ref
 
     rng = np.random.RandomState(0)
     keys = jnp.asarray(rng.permutation(1 << 20)[:n_keys] + 1, jnp.int32)

@@ -3,7 +3,6 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,0 +1,22 @@
+"""locklint — static analysis + small-P model checking of the lock
+programs.
+
+  * `repro.analysis.trace` — eager replay of instruction handlers with
+    window/register footprint recording (TraceArray).
+  * `repro.analysis.ir` — per-instruction IR (footprints, declared
+    effects, CFG edges) extracted from recorded replays.
+  * `repro.analysis.model` — exhaustive small-P model checker over the
+    canonical (timing-free) state space: mutual exclusion,
+    reader/writer exclusion, deadlock/livelock freedom.
+  * `repro.analysis.lints` — layout, bounds, structure and lost-wakeup
+    lints over layouts and extracted IR.
+  * `repro.analysis.locklint` — the CLI driving all passes
+    (`python -m repro.analysis.locklint --all`).
+
+The runtime counterpart is the opt-in sanitizer in `repro.core.engine`
+(`REPRO_CHECKS=1` or `engine.runtime_checks(True)`), which routes the
+single-run simulation paths through `jax.experimental.checkify` index
+and assertion checks.
+"""
+from repro.analysis.lints import Finding  # noqa: F401
+from repro.analysis.model import Explorer  # noqa: F401

@@ -30,6 +30,12 @@ from repro.core.cost import CostModel, DEFAULT_COST
 from repro.core.session import Session
 from repro.core.spec import LockSpec, registered_kinds, writer_mask  # noqa: F401 (re-export)
 
+warnings.warn(
+    "repro.core.api is deprecated: build a repro.core.LockSpec and run it "
+    "through repro.core.Session instead (the per-kind classes here are "
+    "thin shims over exactly that).",
+    DeprecationWarning, stacklevel=2)
+
 
 @dataclasses.dataclass
 class BaseLock:

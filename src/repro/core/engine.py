@@ -17,23 +17,84 @@ paper's spin loops but O(1) events per wait.
 Schedule randomization: every instruction duration receives seeded
 uniform jitter. `vmap` over seeds yields thousands of distinct
 interleavings per configuration — our executable analogue of the paper's
-SPIN model checking (§4.4), used by the property tests.
+SPIN model checking (§4.4), used by the property tests. The exhaustive
+counterpart lives in `repro.analysis`: a static analyzer + small-P model
+checker over these same instruction handlers
+(`python -m repro.analysis.locklint --all`), plus an opt-in runtime
+sanitizer here (`REPRO_CHECKS=1` or `runtime_checks(True)`) that routes
+the single-run simulation paths through `jax.experimental.checkify`.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import os
 from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import checkify
 
 from repro.core.cost import CostModel, DEFAULT_COST
 from repro.core.topology import Machine, proc_distance_matrix
 from repro.core.window import Layout, padded_level_table
 
 INF = jnp.float32(3.4e38)
+
+# ---------------------------------------------------------------------------
+# Opt-in runtime sanitizer. When enabled (REPRO_CHECKS=1 in the
+# environment, or `with runtime_checks(True):`), the single-dispatch run
+# paths (`run_sim` / `run_sim_batch`) are traced through
+# `jax.experimental.checkify` with index checks plus the protocol
+# assertions below — every gather/scatter index is validated and
+# `finish_instr`'s declared effects (hot word, write set, watch words)
+# are bounds-checked and checked against the padded dead-counter slots.
+# The static counterpart is `repro.analysis.locklint`. Off by default:
+# checkify adds error plumbing through the while_loop carry and roughly
+# doubles compile time, so production sweeps never pay for it.
+
+_RUNTIME_CHECKS_OVERRIDE: bool | None = None
+# True only while tracing a checkified variant — gates the
+# checkify.check calls so the plain (fast) trace contains none of them.
+_SANITIZE_TRACING = False
+
+
+def checks_enabled() -> bool:
+    """Whether runs should go through the checkify sanitizer."""
+    if _RUNTIME_CHECKS_OVERRIDE is not None:
+        return _RUNTIME_CHECKS_OVERRIDE
+    return os.environ.get("REPRO_CHECKS", "0").lower() not in (
+        "", "0", "false", "no")
+
+
+@contextlib.contextmanager
+def runtime_checks(enable: bool = True):
+    """Force the runtime sanitizer on (or off) within a scope,
+    overriding the REPRO_CHECKS environment variable."""
+    global _RUNTIME_CHECKS_OVERRIDE
+    prev = _RUNTIME_CHECKS_OVERRIDE
+    _RUNTIME_CHECKS_OVERRIDE = bool(enable)
+    try:
+        yield
+    finally:
+        _RUNTIME_CHECKS_OVERRIDE = prev
+
+
+def _sanitize_word(env: "Env", what: str, w, *, allow_none: bool):
+    """checkify assertions for one declared word operand of an
+    instruction: in [-1, W) (-1 = "none" where allowed) and never one of
+    the padded dead counter slots (ctr_mask == False)."""
+    w = jnp.asarray(w, jnp.int32)
+    W = env.owner.shape[0]
+    lo = -1 if allow_none else 0
+    checkify.check((w >= lo) & (w < W),
+                   what + " word {w} outside [" + str(lo) + ", W)", w=w)
+    dead = (jnp.any((env.arrive_w == w) & ~env.ctr_mask)
+            | jnp.any((env.depart_w == w) & ~env.ctr_mask))
+    checkify.check(~dead, what + " word {w} is a padded dead counter slot",
+                   w=w)
 
 
 class SimState(NamedTuple):
@@ -128,6 +189,15 @@ def finish_instr(env: Env, st: SimState, p, now, key, *, dur, hot_word,
     dur = jnp.asarray(dur, jnp.float32)
     jit_amt = jax.random.uniform(key, (), jnp.float32, 0.0, env.cost.jitter)
     hot = jnp.asarray(hot_word, jnp.int32)
+    if _SANITIZE_TRACING:
+        _sanitize_word(env, "hot", hot, allow_none=True)
+        for w in writes:
+            _sanitize_word(env, "write", w, allow_none=True)
+        if block_a is not None:
+            _sanitize_word(env, "block_a", block_a, allow_none=True)
+        if block_b is not None:
+            _sanitize_word(env, "block_b", block_b, allow_none=True)
+        checkify.check(dur >= 0, "negative instruction duration {d}", d=dur)
     busy_at = jnp.where(hot >= 0, st.busy[jnp.maximum(hot, 0)], jnp.float32(0))
     start = jnp.maximum(now, busy_at)
     finish = start + dur + jit_amt
@@ -144,10 +214,13 @@ def finish_instr(env: Env, st: SimState, p, now, key, *, dur, hot_word,
     blocked_b = blocked_b.at[p].set(-1)
     # Wake watchers of written words — but only if the stored value
     # actually changed (a spinner only observes changes; a failed CAS or
-    # an idempotent Put must not wake the herd).
+    # an idempotent Put must not wake the herd). A -1 entry means "no
+    # write this time" (data-dependent write sets); it must not match
+    # the -1 in blocked_a/b, which marks a process as NOT blocked.
     for w in writes:
         w = jnp.asarray(w, jnp.int32)
-        changed = st.window[w] != window[w]
+        ws = jnp.maximum(w, 0)
+        changed = (st.window[ws] != window[ws]) & (w >= 0)
         hit = ((blocked_a == w) | (blocked_b == w)) & (~st.done) & changed
         t_ready = jnp.where(hit, jnp.minimum(t_ready, finish + env.cost.wake),
                             t_ready)
@@ -192,7 +265,11 @@ def cs_enter(env: Env, st: SimState, p, now) -> SimState:
     w = env.is_writer[p]
     viol = jnp.where(
         (st.writer_active > 0) | (w & (st.reader_active > 0)), 1, 0)
-    same = env.same_leaf[st.hold_rank, p] & (st.hold_rank >= 0)
+    # Clamp before the gather: -1 ("no holder yet") is masked out below,
+    # so the wrapped row must never be fetched (it would also trip the
+    # sanitizer's index checks).
+    hr = jnp.maximum(st.hold_rank, 0)
+    same = env.same_leaf[hr, p] & (st.hold_rank >= 0)
     return st._replace(
         violations=st.violations + viol,
         writer_active=st.writer_active + jnp.where(w, 1, 0),
@@ -361,8 +438,65 @@ def step_loop(handlers, max_events: int, st: SimState, seed) -> SimState:
 
 
 @functools.partial(jax.jit, static_argnames=("handlers", "max_events"))
-def _run(handlers, max_events: int, st: SimState, seed) -> SimState:
+def _run_jit(handlers, max_events: int, st: SimState, seed) -> SimState:
     return step_loop(handlers, max_events, st, seed)
+
+
+_CHECK_ERRORS = checkify.index_checks | checkify.user_checks
+
+
+def _rewrap(handlers):
+    """Fresh closure per handler. lax.switch/while_loop cache traced
+    jaxprs by branch-function identity, and the checked and plain paths
+    trace the SAME handler objects with different `_SANITIZE_TRACING`
+    values — sharing cache entries would either leak un-functionalized
+    `check` primitives into the plain path or silently drop every check
+    from the sanitized one. Distinct wrapper objects split the cache."""
+    return tuple((lambda *a, _h=h: _h(*a)) for h in handlers)
+
+
+@functools.lru_cache(maxsize=MEMO_MAX_ENTRIES)
+def _checked_run(handlers, max_events: int):
+    wrapped = _rewrap(handlers)
+    return jax.jit(checkify.checkify(
+        lambda st, seed: step_loop(wrapped, max_events, st, seed),
+        errors=_CHECK_ERRORS))
+
+
+@functools.lru_cache(maxsize=MEMO_MAX_ENTRIES)
+def _checked_run_batch(handlers, max_events: int):
+    # checkify cannot wrap a batched while-loop, so the transform order
+    # is vmap-of-checkify: each seed's run carries its own error slot
+    # and `.throw()` on the batched error reports the first failure.
+    wrapped = _rewrap(handlers)
+    checked = checkify.checkify(
+        lambda st, s: step_loop(wrapped, max_events, st, s),
+        errors=_CHECK_ERRORS)
+
+    def batched(st, seeds):
+        err, final = jax.vmap(lambda s: checked(st, s))(seeds)
+        return err, jax.vmap(summarize)(final)
+    return jax.jit(batched)
+
+
+def _call_checked(fn, *args):
+    """Invoke a checkified variant with the sanitizer assertions traced
+    in, and raise its first pending error (if any)."""
+    global _SANITIZE_TRACING
+    prev = _SANITIZE_TRACING
+    _SANITIZE_TRACING = True
+    try:
+        err, out = fn(*args)
+    finally:
+        _SANITIZE_TRACING = prev
+    err.throw()
+    return out
+
+
+def _run(handlers, max_events: int, st: SimState, seed) -> SimState:
+    if checks_enabled():
+        return _call_checked(_checked_run(handlers, max_events), st, seed)
+    return _run_jit(handlers, max_events, st, seed)
 
 
 def summarize(st: SimState) -> Metrics:
@@ -388,10 +522,18 @@ def summarize(st: SimState) -> Metrics:
 
 
 @functools.partial(jax.jit, static_argnames=("handlers", "max_events"))
-def _run_batch(handlers, max_events: int, st: SimState,
-               seeds: jnp.ndarray) -> Metrics:
+def _run_batch_jit(handlers, max_events: int, st: SimState,
+                   seeds: jnp.ndarray) -> Metrics:
     final = jax.vmap(lambda s: step_loop(handlers, max_events, st, s))(seeds)
     return jax.vmap(summarize)(final)
+
+
+def _run_batch(handlers, max_events: int, st: SimState,
+               seeds: jnp.ndarray) -> Metrics:
+    if checks_enabled():
+        return _call_checked(_checked_run_batch(handlers, max_events),
+                             st, seeds)
+    return _run_batch_jit(handlers, max_events, st, seeds)
 
 
 def run_sim(program, env: Env, layout: Layout, *, seed=0,

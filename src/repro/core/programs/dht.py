@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import (Env, SimState, finish_instr,
                                memoized_build, think_duration)
+from repro.core.programs.meta import SEG_SCRATCH, ProgramMeta
 
 A_OP, A_OVERFLOW, A_DONE, A_CHAIN = 0, 1, 2, 3
 
@@ -57,6 +58,30 @@ class FompiADHT:
     def init_regs(self, env: Env):
         import numpy as np
         return np.zeros((env.P, self.n_regs), np.int32)
+
+    def meta(self, env: Env) -> ProgramMeta:
+        """Declared program shape for `repro.analysis` (locklint).
+
+        The table/heap words live in the window's scratch region (see
+        benchmarks/dht_bench.py), so SEG_SCRATCH is the allowed segment.
+        There is no critical section: foMPI-A is the lock-free variant.
+        """
+        import numpy as np
+        writers = np.asarray(self.writer_mask)
+        dead = set()
+        if not writers.any():
+            dead.add(A_OVERFLOW)
+        if writers.all():
+            dead.add(A_CHAIN)
+        return ProgramMeta(
+            name="fompi_a_dht", n_pcs=4, n_regs=self.n_regs,
+            pc_names=("A_OP", "A_OVERFLOW", "A_DONE", "A_CHAIN"),
+            dead_pcs=frozenset(dead),
+            cs_enter_pcs=frozenset(),
+            cs_exit_pcs=frozenset(),
+            done_pcs=frozenset({A_DONE}),
+            blocking_pcs=frozenset(),
+            segments=(SEG_SCRATCH,))
 
     def build(self, env: Env):
         return memoized_build(self._cache, env, self._build)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core.engine import (Env, SimState, cs_duration, cs_enter,
                                cs_exit, finish_instr, memoized_build,
                                think_duration)
+from repro.core.programs.meta import SEG_SCRATCH, ProgramMeta
 
 _NOOP = jnp.int32(-1)
 
@@ -52,6 +53,19 @@ class FompiSpin:
     def init_regs(self, env: Env):
         import numpy as np
         return np.zeros((env.P, self.n_regs), np.int32)
+
+    def meta(self, env: Env) -> ProgramMeta:
+        """Declared program shape for `repro.analysis` (locklint)."""
+        return ProgramMeta(
+            name="fompi_spin", n_pcs=4, n_regs=self.n_regs,
+            pc_names=("S_TRY", "S_CS", "S_REL", "S_DONE"),
+            dead_pcs=frozenset(),
+            cs_enter_pcs=frozenset({S_CS}),
+            cs_exit_pcs=frozenset({S_REL}),
+            done_pcs=frozenset({S_DONE}),
+            blocking_pcs=frozenset({S_TRY}),
+            segments=(SEG_SCRATCH,),
+            scratch_slots=(self.lock_slot,))
 
     def build(self, env: Env):
         return memoized_build(self._cache, env, self._build)
@@ -121,6 +135,28 @@ class FompiRW:
     def init_regs(self, env: Env):
         import numpy as np
         return np.zeros((env.P, self.n_regs), np.int32)
+
+    def meta(self, env: Env) -> ProgramMeta:
+        """Declared program shape for `repro.analysis` (locklint)."""
+        import numpy as np
+        writers = np.asarray(env.is_writer)
+        dead = set()
+        if not writers.any():
+            dead |= {W_TRY, W_WAITR, W_CS, W_REL, W_DONE}
+        if writers.all():
+            dead |= {R_INC, R_CHECK, R_UNDO, R_CS, R_REL, R_DONE}
+        return ProgramMeta(
+            name="fompi_rw", n_pcs=11, n_regs=self.n_regs,
+            pc_names=("W_TRY", "W_WAITR", "W_CS", "W_REL", "W_DONE",
+                      "R_INC", "R_CHECK", "R_UNDO", "R_CS", "R_REL",
+                      "R_DONE"),
+            dead_pcs=frozenset(dead),
+            cs_enter_pcs=frozenset({W_CS, R_CS}),
+            cs_exit_pcs=frozenset({W_REL, R_REL}),
+            done_pcs=frozenset({W_DONE, R_DONE}),
+            blocking_pcs=frozenset({W_TRY, W_WAITR, R_UNDO}),
+            segments=(SEG_SCRATCH,),
+            scratch_slots=(self.rcnt_slot, self.wflag_slot))
 
     def build(self, env: Env):
         return memoized_build(self._cache, env, self._build)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core.engine import Env, SimState, cs_duration, cs_enter, cs_exit, finish_instr, think_duration
+from repro.core.programs.meta import (SEG_COUNTERS, SEG_QUEUES,
+                                      ProgramMeta)
 from repro.core.window import (ACQUIRE_PARENT, ACQUIRE_START, MODE_CHANGE,
                                NULL, WAIT, WRITE_FLAG)
 
@@ -51,7 +53,19 @@ DONE_ONE = 20
 # Reader PCs (Listing 9/10).
 R_BARRIER, R_FAO, R_CHECK_TAIL, R_BACKOFF, R_CS, R_RELEASE, R_RESET, R_DONE = (
     21, 22, 23, 24, 25, 26, 27, 28)
-N_PCS = 29
+# Barred-reader recovery (see r_recover): reset the counter when the
+# last writer departed after the reader passed R_CHECK_TAIL. Found by
+# the repro.analysis model checker (a barred reader could starve).
+R_RECOVER = 29
+N_PCS = 30
+
+PC_NAMES = (
+    "WA_PREP", "WA_ENQ", "WA_LINK", "WA_SPIN", "WA_START_PARENT",
+    "W_SCTW_FLAG", "W_SCTW_VERIFY", "TRAP7", "CS", "WR_READ",
+    "WR_DECIDE", "ROOT_DECIDE", "ROOT_RESET", "ROOT_CAS",
+    "ROOT_WAITSUCC", "ROOT_PASS", "UNW_CHECK", "UNW_WAIT", "UNW_PUT",
+    "ROOT_GETSUCC", "DONE_ONE", "R_BARRIER", "R_FAO", "R_CHECK_TAIL",
+    "R_BACKOFF", "R_CS", "R_RELEASE", "R_RESET", "R_DONE", "R_RECOVER")
 
 _NOOP = jnp.int32(-1)
 
@@ -77,6 +91,37 @@ class HierProgram:
         regs = np.zeros((env.P, N_REGS), np.int32)
         regs[:, L] = env.N - 1
         return regs
+
+    def meta(self, env: Env) -> ProgramMeta:
+        """Declared program shape for `repro.analysis` (locklint)."""
+        Nlv = int(env.N)
+        dead = {7}                      # merged into WA_START_PARENT
+        if self.has_readers:
+            segments = (SEG_QUEUES, SEG_COUNTERS)
+        else:
+            segments = (SEG_QUEUES,)
+            # Reader and hand-to-readers instructions exist in the
+            # handler table but are never routed to.
+            dead |= {W_SCTW_FLAG, W_SCTW_VERIFY, ROOT_RESET,
+                     R_BARRIER, R_FAO, R_CHECK_TAIL, R_BACKOFF, R_CS,
+                     R_RELEASE, R_RESET, R_DONE, R_RECOVER}
+        if Nlv == 1:
+            # Single root queue: no per-level descent, and the unwind
+            # above the release floor is empty (UNW_CHECK finishes
+            # immediately), so the late-successor pcs cannot run.
+            dead |= {WR_READ, WR_DECIDE, UNW_WAIT, UNW_PUT}
+        return ProgramMeta(
+            name="rma_rw" if self.has_readers else
+                 ("d_mcs" if Nlv == 1 else "rma_mcs"),
+            n_pcs=N_PCS, n_regs=N_REGS, pc_names=PC_NAMES,
+            dead_pcs=frozenset(dead),
+            cs_enter_pcs=frozenset({CS, R_CS}),
+            cs_exit_pcs=frozenset(
+                {ROOT_DECIDE if Nlv == 1 else WR_READ, R_RELEASE}),
+            done_pcs=frozenset({DONE_ONE, R_DONE}),
+            blocking_pcs=frozenset({WA_SPIN, W_SCTW_VERIFY,
+                                    ROOT_WAITSUCC, UNW_WAIT, R_BARRIER}),
+            segments=segments)
 
     # -- helpers -------------------------------------------------------
     def build(self, env: Env):
@@ -438,14 +483,28 @@ class HierProgram:
         def r_barrier(p, now, key, st: SimState):
             r = st.regs[p]
             wa = env.arrive_w[env.ctr_of_p[p]]
+            t = tw(0, p)
             s = st.window[wa]
-            barred = (r[BARRIER] == 1) & (s >= env.T_R)
-            nxt = jnp.where(barred, R_BARRIER, R_FAO)
-            dur = jnp.where(r[BARRIER] == 1, env.lat_plain(p, wa),
+            over = (r[BARRIER] == 1) & (s >= env.T_R)
+            # Starvation recovery (found by the repro.analysis model
+            # checker): a barred reader saw a writer in the root tail at
+            # R_CHECK_TAIL, so it skipped the self-reset — but if that
+            # writer departs for good, nobody resets the counter and the
+            # reader waits forever. Re-check the tail while barred and
+            # reset the counter ourselves once it drains; watch the tail
+            # word too so the departing writer's CAS wakes us.
+            cur_tail = st.window[t]
+            recover = over & (cur_tail == NULL)
+            barred = over & ~recover
+            nxt = jnp.where(recover, R_RECOVER,
+                            jnp.where(barred, R_BARRIER, R_FAO))
+            dur = jnp.where(r[BARRIER] == 1,
+                            env.lat_plain(p, wa) + env.lat_plain(p, t),
                             jnp.float32(0.02))
             return finish_instr(env, st, p, now, key, dur=dur, hot_word=-1,
                                 writes=[], next_pc=nxt, regs_row=r,
-                                block_a=jnp.where(barred, wa, _NOOP))
+                                block_a=jnp.where(barred, wa, _NOOP),
+                                block_b=jnp.where(barred, t, _NOOP))
 
         def r_fao(p, now, key, st: SimState):
             """Listing 9 line 12: FAO(1, c(p), ARRIVE, SUM)."""
@@ -506,19 +565,41 @@ class HierProgram:
                                 window=win)
 
         def r_reset(p, now, key, st: SimState):
-            """Listing 9 line 20: reset own counter; clear barrier."""
+            """Listing 9 line 20: reset own counter; clear barrier.
+
+            Only the departed readers are subtracted — the writer's
+            WRITE_FLAG (if one raced in after our R_CHECK_TAIL) must
+            survive, or W_SCTW_VERIFY's `(arrive - FLAG) == depart`
+            can never hold again and the writer starves (race found by
+            the repro.analysis model checker)."""
             r = st.regs[p]
             c = env.ctr_of_p[p]
             wa, wd = env.arrive_w[c], env.depart_w[c]
-            arr, dep = st.window[wa], st.window[wd]
-            sub_arr = -dep - jnp.where(arr >= WRITE_FLAG, WRITE_FLAG, 0)
-            win = st.window.at[wa].add(sub_arr).at[wd].add(-dep)
+            dep = st.window[wd]
+            win = st.window.at[wa].add(-dep).at[wd].add(-dep)
             r = r.at[BARRIER].set(0)
             return finish_instr(env, st, p, now, key,
                                 dur=2.0 * env.lat_plain(p, wa)
                                 + 2.0 * env.lat_atomic(p, wa),
                                 hot_word=wa, writes=[wa, wd],
                                 next_pc=R_BACKOFF, regs_row=r, window=win)
+
+        def r_recover(p, now, key, st: SimState):
+            """Barred-reader self-reset (starvation recovery; see
+            r_barrier). Unlike R_RESET this is reached after R_BACKOFF
+            already removed our own arrival, so it returns to R_BARRIER
+            directly instead of passing through R_BACKOFF again."""
+            r = st.regs[p]
+            c = env.ctr_of_p[p]
+            wa, wd = env.arrive_w[c], env.depart_w[c]
+            dep = st.window[wd]
+            win = st.window.at[wa].add(-dep).at[wd].add(-dep)
+            r = r.at[BARRIER].set(0)
+            return finish_instr(env, st, p, now, key,
+                                dur=2.0 * env.lat_plain(p, wa)
+                                + 2.0 * env.lat_atomic(p, wa),
+                                hot_word=wa, writes=[wa, wd],
+                                next_pc=R_BARRIER, regs_row=r, window=win)
 
         def r_done(p, now, key, st: SimState):
             r = st.regs[p]
@@ -537,8 +618,11 @@ class HierProgram:
                                 extra=extra)
 
         def trap(p, now, key, st: SimState):
+            # Self-loop: pc 7 is unused, and a self-looping trap shows
+            # up as a stuck SCC in the model checker if anything ever
+            # mis-routes here, instead of silently limping onward.
             return finish_instr(env, st, p, now, key, dur=1.0, hot_word=-1,
-                                writes=[], next_pc=N_PCS - 1,
+                                writes=[], next_pc=7,
                                 regs_row=st.regs[p])
 
         handlers = [trap] * N_PCS
@@ -570,6 +654,7 @@ class HierProgram:
         handlers[R_RELEASE] = r_release
         handlers[R_RESET] = r_reset
         handlers[R_DONE] = r_done
+        handlers[R_RECOVER] = r_recover
         return tuple(handlers)
 
 

@@ -236,9 +236,9 @@ class Session:
             st_d = engine.init_state(
                 self.env, layout_d, self.program.init_pc(self.env),
                 self.program.n_regs, self.program.init_regs(self.env))
-            for l in t_l:
+            for tl in t_l:
                 for r in t_r:
-                    spec_k = self.spec.replace(T_DC=d, T_L=l, T_R=r)
+                    spec_k = self.spec.replace(T_DC=d, T_L=tl, T_R=r)
                     dyns.append(dict(ldyn, **_tl_dyn(spec_k),
                                      **_tr_dyn(spec_k)))
                     states.append(st_d)

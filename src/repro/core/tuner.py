@@ -54,6 +54,13 @@ class TuneResult:
     n_points: int                 # distinct lattice points evaluated
     rounds: tuple                 # per-round lattices + incumbents
     n_devices: int = 1            # devices the grid dispatches ran on
+    # Safety evidence at the winner: total mutual-exclusion violations
+    # and completion across ALL seeds. Winner selection already rejects
+    # any point with violations > 0 or completed == False, so a report
+    # with anything but (0, True) here indicates a tuner bug — the
+    # columns exist so deployment consumers can verify, not trust.
+    violations: int = 0
+    completed: bool = True
 
     def to_dict(self) -> dict:
         return {
@@ -67,6 +74,8 @@ class TuneResult:
             "n_points": self.n_points,
             "rounds": [dict(r) for r in self.rounds],
             "n_devices": self.n_devices,
+            "violations": self.violations,
+            "completed": self.completed,
         }
 
     def to_json(self) -> str:
@@ -82,7 +91,11 @@ class TuneResult:
             throughput_per_seed=tuple(d["throughput_per_seed"]),
             n_points=d["n_points"],
             rounds=tuple(_round_from_dict(r) for r in d["rounds"]),
-            n_devices=d.get("n_devices", 1))
+            n_devices=d.get("n_devices", 1),
+            # Reports written before the safety columns existed default
+            # to the only values a correct tuner can emit.
+            violations=d.get("violations", 0),
+            completed=d.get("completed", True))
 
 
 def _round_from_dict(r: dict) -> dict:
@@ -93,8 +106,8 @@ def _round_from_dict(r: dict) -> dict:
 
 
 def _key_from_json(k) -> tuple:
-    d, l, r = k
-    return (int(d), None if l is None else tuple(l), int(r))
+    d, tl, r = k
+    return (int(d), None if tl is None else tuple(tl), int(r))
 
 
 def default_lattice(spec: LockSpec) -> dict:
@@ -125,12 +138,12 @@ def _validate_lattice(lattice: dict, P: int) -> None:
         if not 1 <= d <= P:
             raise ValueError(
                 f"t_dc axis: T_DC={d} out of range [1, P={P}]")
-    for l in lattice["t_l"]:
-        if l is None:
+    for tl in lattice["t_l"]:
+        if tl is None:
             continue
-        if not l or any(int(x) < 1 for x in l):
+        if not tl or any(int(x) < 1 for x in tl):
             raise ValueError(
-                f"t_l axis: T_L={l} — per-level thresholds must be a "
+                f"t_l axis: T_L={tl} — per-level thresholds must be a "
                 f"non-empty tuple of entries >= 1 (or None)")
     for r in lattice["t_r"]:
         if r < 1:
@@ -156,11 +169,11 @@ def _refine_ints(values, best: int) -> list:
 
 
 def _refine_lattice(lattice: dict, best: tuple) -> dict:
-    d, l, r = best
+    d, tl, r = best
     t_l = lattice["t_l"]
-    if l is not None and None not in t_l:
+    if tl is not None and None not in t_l:
         leafs = sorted({v[-1] for v in t_l})
-        t_l = [l[:-1] + (leaf,) for leaf in _refine_ints(leafs, l[-1])]
+        t_l = [tl[:-1] + (leaf,) for leaf in _refine_ints(leafs, tl[-1])]
     return {"t_dc": _refine_ints(lattice["t_dc"], d),
             "t_l": t_l,
             "t_r": _refine_ints(lattice["t_r"], r)}
@@ -214,12 +227,13 @@ def tune(spec: LockSpec, *, t_dc=None, t_l=None, t_r=None,
         else:
             score = np.where(valid, -lat, -np.inf)
         for di, d in enumerate(lattice["t_dc"]):
-            for li, l in enumerate(lattice["t_l"]):
+            for li, tl in enumerate(lattice["t_l"]):
                 for ri, r in enumerate(lattice["t_r"]):
-                    evaluated[(d, l, r)] = (
+                    evaluated[(d, tl, r)] = (
                         float(score[di, li, ri]), float(tput[di, li, ri]),
                         float(lat[di, li, ri]),
-                        tuple(float(x) for x in tput_s[di, li, ri]))
+                        tuple(float(x) for x in tput_s[di, li, ri]),
+                        int(viol[di, li, ri]), bool(comp[di, li, ri]))
         best = max(evaluated, key=lambda k: evaluated[k][0])
         if not np.isfinite(evaluated[best][0]):
             # Fail fast: refining around an arbitrary disqualified
@@ -230,16 +244,18 @@ def tune(spec: LockSpec, *, t_dc=None, t_l=None, t_r=None,
         rounds.append({"t_dc": list(lattice["t_dc"]),
                        "t_l": list(lattice["t_l"]),
                        "t_r": list(lattice["t_r"]),
-                       "best": best, "best_score": evaluated[best][0]})
+                       "best": best, "best_score": evaluated[best][0],
+                       "n_disqualified": int(np.sum(~valid))})
         if rnd < refine_rounds:
             lattice = _refine_lattice(lattice, best)
 
     best = max(evaluated, key=lambda k: evaluated[k][0])
-    b_score, b_tput, b_lat, b_per_seed = evaluated[best]
-    d, l, r = best
+    b_score, b_tput, b_lat, b_per_seed, b_viol, b_comp = evaluated[best]
+    d, tl, r = best
     return TuneResult(
-        spec=spec.replace(T_DC=d, T_L=l, T_R=r), objective=objective,
+        spec=spec.replace(T_DC=d, T_L=tl, T_R=r), objective=objective,
         score=b_score, throughput=b_tput, latency_us=b_lat, seeds=seeds,
         throughput_per_seed=b_per_seed, n_points=len(evaluated),
         rounds=tuple(rounds),
-        n_devices=1 if sess.devices is None else len(sess.devices))
+        n_devices=1 if sess.devices is None else len(sess.devices),
+        violations=b_viol, completed=b_comp)

@@ -11,7 +11,6 @@ same entrypoint jits with the production mesh shardings (--mesh single
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main():
@@ -60,7 +59,6 @@ def run_hier(cfg, args):
     pod axis is a leading array dim; on a real multi-pod mesh the same
     step runs under pjit with that dim sharded over 'pod')."""
     import jax
-    import jax.numpy as jnp
     from repro.data import batch_for
     from repro.parallel.hierarchical import (build_hier_train_step,
                                              init_hier_state)

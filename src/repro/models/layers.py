@@ -8,10 +8,6 @@ same algorithm the Pallas kernel implements on TPU (kernels/flash_attention).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -96,7 +92,7 @@ def _block_attn_body(q, k, v, mask_fn, q_offset, kv_block):
     nkv = S // kv_block
 
     def body(carry, i):
-        m, l, acc = carry
+        m, den, acc = carry
         ks = jax.lax.dynamic_slice_in_dim(k, i * kv_block, kv_block, 1)
         vs = jax.lax.dynamic_slice_in_dim(v, i * kv_block, kv_block, 1)
         s = jnp.einsum("bqkgd,bskd->bkgqs", qs, ks.astype(jnp.float32))
@@ -107,16 +103,16 @@ def _block_attn_body(q, k, v, mask_fn, q_offset, kv_block):
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
+        den = den * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bkgqs,bskd->bkgqd", p, vs.astype(jnp.float32))
-        return (m_new, l, acc), None
+        return (m_new, den, acc), None
 
     m0 = jnp.full((B, KV, G, Bq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, KV, G, Bq), jnp.float32)
     a0 = jnp.zeros((B, KV, G, Bq, Dh), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, den, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Bq, H, Dh)
 
 

@@ -22,10 +22,9 @@ import dataclasses
 import json
 import os
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               load_checkpoint)

@@ -9,7 +9,6 @@ compressed variants live in parallel.hierarchical).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

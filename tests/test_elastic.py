@@ -7,10 +7,8 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import save_checkpoint
 from tests.test_system import TINY
 
 

@@ -96,13 +96,13 @@ def test_grid_bitwise_vs_fresh_sessions():
     assert g.violations.shape == (2, 2, 2, 2)
     assert int(np.asarray(g.violations).sum()) == 0
     for di, d in enumerate(t_dc):
-        for li, l in enumerate(t_l):
+        for li, tl in enumerate(t_l):
             for ri, r in enumerate(t_r):
                 ref = Session(
-                    SMALL_RW.replace(T_DC=d, T_L=l, T_R=r),
+                    SMALL_RW.replace(T_DC=d, T_L=tl, T_R=r),
                     target_acq=2, max_events=MAX_EVENTS).run_batch(seeds)
                 assert_metrics_equal(metrics_at(g, di, li, ri), ref,
-                                     (d, l, r))
+                                     (d, tl, r))
 
 
 def test_grid_single_dispatch(build_counter):

@@ -1,6 +1,5 @@
 """Per-kernel allclose sweeps against the pure-jnp oracles (interpret
 mode executes the kernel bodies on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

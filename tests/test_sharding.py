@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, get_smoke_config
+from repro.configs import get_config
 from repro.models import lm
 from repro.parallel import sharding as shd
 

@@ -168,6 +168,14 @@ def test_sweep_rejects_unknown_axis():
 
 
 # -------------------------------------------------- deprecation shims
+def test_api_module_import_warns_naming_replacement():
+    import importlib
+    import sys
+    sys.modules.pop("repro.core.api", None)
+    with pytest.warns(DeprecationWarning, match="LockSpec.*Session"):
+        importlib.import_module("repro.core.api")
+
+
 def test_api_shim_still_runs_and_warns():
     from repro.core import api
     with warnings.catch_warnings(record=True) as caught:

@@ -1,14 +1,12 @@
 """End-to-end system tests: trainer, checkpointing, crash recovery,
 hierarchical (pod-local) sync, versioned store, data determinism."""
 import json
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke_config
 from repro.configs.base import ArchConfig
 
 TINY = ArchConfig(
@@ -47,7 +45,7 @@ def test_training_reduces_loss(tmp_path):
     tr = Trainer(TINY, str(tmp_path), tc)
     tr.run(120)
     with open(tr.metrics_path) as f:
-        recs = [json.loads(l) for l in f]
+        recs = [json.loads(line) for line in f]
     first = np.mean([r["loss"] for r in recs[:3]])
     last = np.mean([r["loss"] for r in recs[-3:]])
     assert last < first - 0.3, f"loss did not drop: {first} -> {last}"
